@@ -1,0 +1,42 @@
+"""Micro-benchmarks of the MASA compute hot-spots via their jnp reference
+paths (XLA-compiled; the Pallas kernels target TPU and only run interpreted
+on CPU, so wall-clock here measures the oracle path)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans import assign_ref
+from repro.kernels.tomo import gridrec, mlem, project_ref, shepp_logan
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    pts = jax.random.normal(jax.random.key(0), (100_000, 3))
+    cen = jax.random.normal(jax.random.key(1), (10, 3))
+    f = jax.jit(assign_ref)
+    dt = _time(f, pts, cen)
+    rows.append(("kernel_kmeans_assign_100k", dt * 1e6, f"points_per_s={1e5/dt:.3e}"))
+
+    n, a = 64, 90
+    img = shepp_logan(n)
+    angles = jnp.linspace(0, jnp.pi, a, endpoint=False)
+    sino = project_ref(img, angles, n + 32)
+    g = jax.jit(lambda s: gridrec(s, angles, n))
+    dt = _time(g, sino)
+    rows.append(("kernel_gridrec_64", dt * 1e6, f"frames_per_s={1/dt:.2f}"))
+    m = jax.jit(lambda s: mlem(s, angles, n, iters=4))
+    dt = _time(m, sino)
+    rows.append(("kernel_mlem_64_it4", dt * 1e6, f"frames_per_s={1/dt:.2f}"))
+    return rows

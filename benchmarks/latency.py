@@ -1,0 +1,70 @@
+"""Fig. 7 analog: end-to-end produce->process latency.
+
+Direct broker consumer (the paper's "Kafka client") vs the micro-batch
+engine at several batch windows (scaled-down analogs of the paper's
+0.2s-8s sweep). Expected shape: latency ~ transport + ~window/2; shrinking
+the window drives the micro-batch overhead toward the direct-consumer
+floor.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from repro.broker import Consumer, ConsumerGroup, Producer
+from repro.core import PilotComputeService
+
+
+def _direct_latency(cluster, n: int = 50) -> float:
+    cluster.create_topic("lat_direct", 1)
+    prod = Producer(cluster, "lat_direct", serializer="npy")
+    group = ConsumerGroup(cluster, "g", "lat_direct")
+    cons = Consumer(cluster, group, "m")
+    lats = []
+    for i in range(n):
+        prod.send(np.array([time.time()]))
+        msgs = cons.poll(1, timeout=2.0)
+        lats.append(time.time() - msgs[0].timestamp)
+    return statistics.median(lats)
+
+
+def _microbatch_latency(cluster, ctx, window: float, n: int = 30) -> float:
+    topic = f"lat_mb_{int(window * 1000)}"
+    cluster.create_topic(topic, 1)
+    prod = Producer(cluster, topic, serializer="npy", rate_msgs_per_s=max(20, 4 / window))
+    lats = []
+
+    def process(state, msgs):
+        now = time.time()
+        lats.extend(now - m.timestamp for m in msgs)
+        return state
+
+    stream = ctx.stream(cluster, topic, group=f"g{topic}", process_fn=process,
+                        batch_interval=window, backpressure=False)
+    stream.start()
+    for i in range(n):
+        prod.send(np.array([time.time()]))
+    deadline = time.monotonic() + 20
+    while len(lats) < n and time.monotonic() < deadline:
+        time.sleep(0.01)
+    stream.stop()
+    return statistics.median(lats) if lats else float("nan")
+
+
+def run() -> list[tuple[str, float, str]]:
+    svc = PilotComputeService()
+    cluster = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"}).get_context()
+    ctx = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"}).get_context()
+    rows = []
+    direct = _direct_latency(cluster)
+    rows.append(("latency_direct_consumer", direct * 1e6, f"median_s={direct:.4f}"))
+    for window in (0.05, 0.2, 0.8):
+        lat = _microbatch_latency(cluster, ctx, window)
+        rows.append(
+            (f"latency_microbatch_{int(window*1000)}ms", lat * 1e6,
+             f"median_s={lat:.4f};window_s={window}")
+        )
+    svc.cancel()
+    return rows

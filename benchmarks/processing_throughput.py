@@ -1,0 +1,65 @@
+"""Fig. 9 analog: MASA processing throughput for the three paper workloads.
+
+KMeans (cheap scoring) vs GridRec (FFT backprojection) vs ML-EM (iterative)
+at reduced frame sizes. Expected shape (paper §6.4): KMeans >> GridRec >
+ML-EM, ordered by computational complexity.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import PilotComputeService
+from repro.miniapps import (
+    KMeansClusterSource,
+    LightsourceTemplateSource,
+    ReconstructionApp,
+    SourceConfig,
+    StreamingKMeans,
+)
+
+
+def _drain(svc, topic_cfg, source, app, n_msgs, max_batch=4):
+    cluster = svc.submit_pilot({"number_of_nodes": 2, "type": "kafka"}).get_context()
+    cluster.create_topic("t", 4)
+    ctx = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"}).get_context()
+    src = source(cluster)
+    s = ctx.stream(cluster, "t", group="g", process_fn=app.process,
+                   batch_interval=0.02, max_batch_records=max_batch, backpressure=False)
+    src.start()
+    s.start()
+    deadline = time.monotonic() + 300
+    while app.stats.messages < n_msgs and time.monotonic() < deadline:
+        time.sleep(0.02)
+    s.stop()
+    src.stop()
+    return app
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    svc = PilotComputeService()
+
+    n = 16
+    app = StreamingKMeans(n_clusters=10, dim=3)
+    _drain(
+        svc, None,
+        lambda c: KMeansClusterSource(c, SourceConfig("t", total_messages=n), points_per_msg=5000),
+        app, n,
+    )
+    rows.append(("process_kmeans", app.stats.compute_time / max(app.stats.messages, 1) * 1e6,
+                 f"msgs_per_s={app.stats.msgs_per_sec:.2f}"))
+    svc.cancel()
+
+    for alg, iters, n in (("gridrec", 0, 6), ("mlem", 4, 4)):
+        svc = PilotComputeService()
+        app = ReconstructionApp(alg, n=64, mlem_iters=iters or 4)
+        _drain(
+            svc, None,
+            lambda c: LightsourceTemplateSource(
+                c, SourceConfig("t", total_messages=n), n_angles=64, n_det=96),
+            app, n, max_batch=1,
+        )
+        rows.append((f"process_{alg}", app.stats.compute_time / max(app.stats.messages, 1) * 1e6,
+                     f"msgs_per_s={app.stats.msgs_per_sec:.2f}"))
+        svc.cancel()
+    return rows

@@ -1,0 +1,51 @@
+"""Fig. 8 analog: MASS producer throughput into the broker.
+
+Sweeps source type (kmeans-random / kmeans-static / lightsource) x producer
+count x broker nodes, with a per-node I/O budget so the 1-broker bottleneck
+of the paper reproduces. Expected shapes: static > random (no RNG cost);
+lightsource moves the most MB/s (2 MB messages); 1-broker configs flatten
+first; more producers help until the broker budget binds.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import PilotComputeService
+from repro.miniapps import SOURCES, SourceConfig
+
+# (source, kwargs, n_msgs, io_rate_per_node): budgets sized so the broker
+# bucket BINDS for template sources (several bucket-fills per run) while the
+# kmeans-random case stays RNG-bound — the two regimes of paper Fig. 8
+CASES = [
+    ("cluster", dict(points_per_msg=2000), 48, 64 * 1024 * 1024),
+    ("static", dict(points_per_msg=2000), 512, 4 * 1024 * 1024),
+    ("lightsource", dict(n_angles=90, n_det=724), 384, 16 * 1024 * 1024),
+]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for src_name, kwargs, n_msgs, io_rate in CASES:
+        for n_producers in (1, 2, 4):
+            for n_brokers in (1, 2):
+                svc = PilotComputeService()
+                pilot = svc.submit_pilot({
+                    "number_of_nodes": n_brokers, "type": "kafka",
+                    "io_rate_per_node": io_rate,
+                })
+                cluster = pilot.get_context()
+                cluster.create_topic("t", max(4, n_producers * 2))
+                cfg = SourceConfig("t", total_messages=n_msgs, n_producers=n_producers)
+                source = SOURCES[src_name](cluster, cfg, **kwargs)
+                t0 = time.monotonic()
+                source.start()
+                source.join(timeout=180)
+                dt = time.monotonic() - t0
+                mb = source.sent_bytes / 1e6
+                rows.append((
+                    f"produce_{src_name}_{n_producers}p_{n_brokers}b",
+                    dt / max(source.sent_records, 1) * 1e6,
+                    f"msgs_per_s={source.sent_records/dt:.1f};MB_per_s={mb/dt:.1f}",
+                ))
+                svc.cancel()
+    return rows

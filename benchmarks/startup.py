@@ -1,0 +1,30 @@
+"""Fig. 6 analog: framework startup time vs cluster size.
+
+On TPU the "cluster start" is lease acquisition + plugin provisioning +
+(for compute engines) step lowering; a configurable per-node provision delay
+emulates the batch-scheduler/bootstrap latency of real HPC clusters (the
+paper's dominant term). Expected shape: startup grows with node count;
+broker ("kafka") > engines; all ≪ streaming-app lifetime.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import PilotComputeService
+
+
+def run(provision_delay_per_node: float = 0.02) -> list[tuple[str, float, str]]:
+    rows = []
+    for framework in ("kafka", "spark", "dask"):
+        for nodes in (1, 2, 4, 8):
+            svc = PilotComputeService(provision_delay_per_node=provision_delay_per_node)
+            t0 = time.monotonic()
+            pilot = svc.submit_pilot({"number_of_nodes": nodes, "type": framework})
+            dt = time.monotonic() - t0
+            if framework == "kafka":  # include topic provisioning like the paper
+                pilot.get_context().create_topic("t", nodes * 4)
+            rows.append(
+                (f"startup_{framework}_{nodes}nodes", dt * 1e6, f"startup_s={dt:.4f}")
+            )
+            svc.cancel()
+    return rows

@@ -1,0 +1,12 @@
+"""Batched LM serving from a request stream (deliverable (b), serving kind).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    sys.argv = ["serve", "--arch", "smollm-135m", "--reduced", "--requests", "6",
+                "--batch", "2", "--prompt-len", "32", "--gen-tokens", "8"]
+    serve_mod.main()

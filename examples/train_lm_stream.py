@@ -1,0 +1,35 @@
+"""End-to-end streaming LM training (deliverable (b)'s training driver).
+
+Streams synthetic token batches through the broker into micro-batch train
+steps with periodic checkpoints. Defaults to a reduced config so it runs on
+CPU in seconds; ``--full`` selects the real smollm-135m (~135M params —
+the "~100M model" scale; expect minutes/step on CPU, realtime on a pod).
+
+    PYTHONPATH=src python examples/train_lm_stream.py --steps 30
+    PYTHONPATH=src python examples/train_lm_stream.py --full --steps 300
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] if len(sys.argv) > 1 else [])
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--full", action="store_true")
+    args, _ = ap.parse_known_args()
+    argv = [
+        "train", "--arch", "smollm-135m", "--steps", str(args.steps),
+        "--seq-len", "128" if not args.full else "512",
+        "--batch", "8",
+    ]
+    if not args.full:
+        argv.append("--reduced")
+    sys.argv = argv
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Log-based message broker (Kafka analog) — host-side data plane."""
+from repro.broker.cluster import BrokerCluster, BrokerNode, Topic
+from repro.broker.consumer import Consumer, ConsumerGroup, Message
+from repro.broker.log import BackpressureError, PartitionLog
+from repro.broker.producer import Producer
+from repro.broker.records import Record, decode_array, decode_msg, encode_array, encode_msg
+
+__all__ = [
+    "BackpressureError",
+    "BrokerCluster",
+    "BrokerNode",
+    "Consumer",
+    "ConsumerGroup",
+    "Message",
+    "PartitionLog",
+    "Producer",
+    "Record",
+    "Topic",
+    "decode_array",
+    "decode_msg",
+    "encode_array",
+    "encode_msg",
+]

@@ -1,0 +1,187 @@
+"""Broker cluster: topics, partition->node placement, elastic scaling, failures.
+
+The unit Pilot-Streaming provisions ("a Kafka cluster on N nodes"). Each
+node has a token-bucket I/O budget so broker-side contention — the
+1-broker-bottleneck effect in the paper's Figs. 8/9 — is reproducible.
+``add_node``/``remove_node`` rebalance partition placement at runtime
+(the paper's cluster-extension capability, Listing 4); ``fail_node``
+exercises the fault-tolerance path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.broker.log import PartitionLog
+from repro.broker.records import Record
+
+
+class TokenBucket:
+    """Byte-rate limiter emulating a node's NIC/disk budget."""
+
+    def __init__(self, rate_bytes_per_s: float | None):
+        self.rate = rate_bytes_per_s
+        self._tokens = float(rate_bytes_per_s or 0)
+        self._last = time.monotonic()
+        self._lock = threading.Lock()
+
+    def consume(self, n: int) -> None:
+        if not self.rate:
+            return
+        with self._lock:
+            while True:
+                now = time.monotonic()
+                self._tokens = min(self.rate, self._tokens + (now - self._last) * self.rate)
+                self._last = now
+                if self._tokens >= n:
+                    self._tokens -= n
+                    return
+                time.sleep(min((n - self._tokens) / self.rate, 0.1))
+
+
+@dataclass
+class BrokerNode:
+    node_id: int
+    io_rate: float | None = None  # bytes/s budget (None = unlimited)
+    alive: bool = True
+    bucket: TokenBucket = field(init=False)
+
+    def __post_init__(self):
+        self.bucket = TokenBucket(self.io_rate)
+
+
+class Topic:
+    def __init__(self, name: str, partitions: list[PartitionLog]):
+        self.name = name
+        self.partitions = partitions
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.partitions)
+
+
+class BrokerCluster:
+    """A set of broker nodes hosting topic partitions."""
+
+    def __init__(self, n_nodes: int = 1, *, io_rate_per_node: float | None = None):
+        self._lock = threading.RLock()
+        self._nodes: dict[int, BrokerNode] = {}
+        self._topics: dict[str, Topic] = {}
+        self._placement: dict[tuple[str, int], int] = {}  # (topic, part) -> node
+        self._offsets: dict[tuple[str, str, int], int] = {}  # (group, topic, part) -> committed
+        self._next_node = 0
+        self.io_rate_per_node = io_rate_per_node
+        for _ in range(n_nodes):
+            self.add_node()
+
+    # ---- cluster membership (elastic) -------------------------------------
+
+    def add_node(self, io_rate: float | None = None) -> int:
+        with self._lock:
+            nid = self._next_node
+            self._next_node += 1
+            self._nodes[nid] = BrokerNode(nid, io_rate or self.io_rate_per_node)
+            self._rebalance_locked()
+            return nid
+
+    def remove_node(self, node_id: int) -> None:
+        with self._lock:
+            self._nodes.pop(node_id, None)
+            self._rebalance_locked()
+
+    def fail_node(self, node_id: int) -> None:
+        """Simulated crash: partitions move to survivors (data retained —
+        stand-in for replication)."""
+        with self._lock:
+            if node_id in self._nodes:
+                self._nodes[node_id].alive = False
+            self._rebalance_locked()
+
+    def _alive_nodes(self) -> list[int]:
+        return sorted(n for n, node in self._nodes.items() if node.alive)
+
+    def _rebalance_locked(self) -> None:
+        nodes = self._alive_nodes()
+        if not nodes:
+            return
+        keys = sorted(self._placement)
+        for i, key in enumerate(keys):
+            self._placement[key] = nodes[i % len(nodes)]
+
+    @property
+    def n_nodes(self) -> int:
+        with self._lock:
+            return len(self._alive_nodes())
+
+    # ---- topics ------------------------------------------------------------
+
+    def create_topic(
+        self,
+        name: str,
+        n_partitions: int,
+        *,
+        max_buffer_bytes: int = 1 << 30,
+        backpressure: str = "block",
+    ) -> Topic:
+        with self._lock:
+            if name in self._topics:
+                raise ValueError(f"topic {name!r} exists")
+            parts = [
+                PartitionLog(name, p, max_buffer_bytes=max_buffer_bytes, backpressure=backpressure)
+                for p in range(n_partitions)
+            ]
+            topic = Topic(name, parts)
+            self._topics[name] = topic
+            nodes = self._alive_nodes()
+            for p in range(n_partitions):
+                self._placement[(name, p)] = nodes[p % len(nodes)]
+            return topic
+
+    def topic(self, name: str) -> Topic:
+        with self._lock:
+            return self._topics[name]
+
+    def delete_topic(self, name: str) -> None:
+        with self._lock:
+            topic = self._topics.pop(name, None)
+            if topic:
+                for p in topic.partitions:
+                    p.close()
+                self._placement = {k: v for k, v in self._placement.items() if k[0] != name}
+
+    # ---- data plane (throttled by node budgets) ------------------------------
+
+    def _node_for(self, topic: str, partition: int) -> BrokerNode:
+        with self._lock:
+            nid = self._placement[(topic, partition)]
+            return self._nodes[nid]
+
+    def append(self, topic: str, partition: int, record: Record) -> int:
+        node = self._node_for(topic, partition)
+        node.bucket.consume(record.size())
+        return self._topics[topic].partitions[partition].append(record)
+
+    def read(self, topic: str, partition: int, offset: int, max_records: int = 512, timeout: float = 0.0):
+        recs = self._topics[topic].partitions[partition].read(offset, max_records, timeout)
+        if recs:
+            node = self._node_for(topic, partition)
+            node.bucket.consume(sum(r.size() for r in recs))
+        return recs
+
+    # ---- consumer-group offsets ------------------------------------------------
+
+    def commit(self, group: str, topic: str, partition: int, offset: int) -> None:
+        with self._lock:
+            self._offsets[(group, topic, partition)] = offset
+
+    def committed(self, group: str, topic: str, partition: int) -> int:
+        with self._lock:
+            return self._offsets.get((group, topic, partition), 0)
+
+    def lag(self, group: str, topic: str) -> dict[int, int]:
+        t = self.topic(topic)
+        return {
+            p.partition: p.high_watermark - self.committed(group, topic, p.partition)
+            for p in t.partitions
+        }

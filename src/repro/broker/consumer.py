@@ -1,0 +1,168 @@
+"""Consumer groups: partition assignment, rebalance, offset commits, lag.
+
+Matches the Kafka semantics that the streaming engines rely on:
+* group members share a topic's partitions (range assignment; deterministic);
+* membership changes (join/leave/failure) trigger rebalance;
+* offsets are explicit — commit-after-process gives at-least-once, and
+  committing atomically with a state checkpoint gives exactly-once
+  (engines/microbatch.py).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.broker.cluster import BrokerCluster
+from repro.broker.records import Record, decode_array, decode_msg
+
+
+@dataclass
+class Message:
+    partition: int
+    offset: int
+    timestamp: float
+    value: Any
+
+
+def _deserialize(data: bytes) -> Any:
+    tag = data[:1]
+    if tag in (b"N",) or (tag == b"Z" and True):
+        # npy and zstd-npy share decode_array; msgpack payloads start with M
+        try:
+            return decode_array(data)
+        except Exception:
+            return decode_msg(data)
+    if tag == b"M":
+        return decode_msg(data)
+    return data
+
+
+class ConsumerGroup:
+    """Coordinator for one (group, topic)."""
+
+    def __init__(self, cluster: BrokerCluster, group: str, topic: str):
+        self.cluster = cluster
+        self.group = group
+        self.topic = topic
+        self._members: list[str] = []
+        self._lock = threading.RLock()
+        self._generation = 0
+
+    def join(self, member_id: str) -> None:
+        with self._lock:
+            if member_id not in self._members:
+                self._members.append(member_id)
+                self._members.sort()
+                self._generation += 1
+
+    def leave(self, member_id: str) -> None:
+        with self._lock:
+            if member_id in self._members:
+                self._members.remove(member_id)
+                self._generation += 1
+
+    def assignment(self, member_id: str) -> list[int]:
+        """Range assignment of partitions for this member."""
+        with self._lock:
+            if member_id not in self._members:
+                return []
+            n_parts = self.cluster.topic(self.topic).n_partitions
+            idx = self._members.index(member_id)
+            n = len(self._members)
+            per, extra = divmod(n_parts, n)
+            start = idx * per + min(idx, extra)
+            count = per + (1 if idx < extra else 0)
+            return list(range(start, start + count))
+
+    @property
+    def generation(self) -> int:
+        with self._lock:
+            return self._generation
+
+
+class Consumer:
+    """One group member. ``poll`` round-robins its assigned partitions."""
+
+    def __init__(
+        self,
+        cluster: BrokerCluster,
+        group: ConsumerGroup,
+        member_id: str,
+        *,
+        deserialize: bool = True,
+        from_committed: bool = True,
+    ):
+        self.cluster = cluster
+        self.group = group
+        self.member_id = member_id
+        self.deserialize = deserialize
+        group.join(member_id)
+        self._positions: dict[int, int] = {}
+        self._generation = -1
+        self._from_committed = from_committed
+        self.consumed_records = 0
+        self.consumed_bytes = 0
+        self._refresh_assignment()
+
+    def _refresh_assignment(self) -> None:
+        if self._generation == self.group.generation:
+            return
+        self._generation = self.group.generation
+        parts = self.group.assignment(self.member_id)
+        positions = {}
+        for p in parts:
+            if p in self._positions:
+                positions[p] = self._positions[p]
+            elif self._from_committed:
+                positions[p] = self.cluster.committed(self.group.group, self.group.topic, p)
+            else:
+                positions[p] = self.cluster.topic(self.group.topic).partitions[p].high_watermark
+        self._positions = positions
+
+    @property
+    def assignment(self) -> list[int]:
+        self._refresh_assignment()
+        return sorted(self._positions)
+
+    def seek(self, partition: int, offset: int) -> None:
+        self._positions[partition] = offset
+
+    def poll(self, max_records: int = 512, timeout: float = 0.0) -> list[Message]:
+        self._refresh_assignment()
+        out: list[Message] = []
+        deadline = time.monotonic() + timeout
+        while not out:
+            for p, pos in list(self._positions.items()):
+                budget = max_records - len(out)
+                if budget <= 0:
+                    break
+                recs = self.cluster.read(self.group.topic, p, pos, budget)
+                for r in recs:
+                    val = _deserialize(r.value) if self.deserialize else r.value
+                    out.append(Message(p, r.offset, r.timestamp, val))
+                    self.consumed_bytes += r.size()
+                if recs:
+                    self._positions[p] = recs[-1].offset + 1
+            if out or time.monotonic() >= deadline:
+                break
+            time.sleep(0.002)
+        self.consumed_records += len(out)
+        return out
+
+    def positions(self) -> dict[int, int]:
+        return dict(self._positions)
+
+    def commit(self, offsets: dict[int, int] | None = None) -> None:
+        offsets = offsets if offsets is not None else self._positions
+        for p, off in offsets.items():
+            self.cluster.commit(self.group.group, self.group.topic, p, off)
+
+    def rewind_to_committed(self) -> None:
+        """Failure recovery: replay from last commit (exactly-once resume)."""
+        for p in list(self._positions):
+            self._positions[p] = self.cluster.committed(self.group.group, self.group.topic, p)
+
+    def close(self) -> None:
+        self.group.leave(self.member_id)

@@ -1,0 +1,58 @@
+"""Architecture registry: ``get_arch("qwen3-14b") -> ArchConfig``."""
+from __future__ import annotations
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.configs.llava_next_mistral_7b import CONFIG as LLAVA
+from repro.configs.seamless_m4t_medium import CONFIG as SEAMLESS
+from repro.configs.phi35_moe import CONFIG as PHI35
+from repro.configs.kimi_k2 import CONFIG as KIMI
+from repro.configs.rwkv6_3b import CONFIG as RWKV6
+from repro.configs.qwen3_14b import CONFIG as QWEN3
+from repro.configs.smollm_135m import CONFIG as SMOLLM
+from repro.configs.stablelm_1_6b import CONFIG as STABLELM
+from repro.configs.starcoder2_3b import CONFIG as STARCODER2
+from repro.configs.zamba2_1_2b import CONFIG as ZAMBA2
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        LLAVA,
+        SEAMLESS,
+        PHI35,
+        KIMI,
+        RWKV6,
+        QWEN3,
+        SMOLLM,
+        STABLELM,
+        STARCODER2,
+        ZAMBA2,
+    ]
+}
+
+#: archs whose sequence mixing is sub-quadratic -> eligible for long_500k
+SUBQUADRATIC = {"rwkv6-3b", "zamba2-1.2b"}
+
+
+def get_arch(name: str) -> ArchConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}") from None
+
+
+def get_shape(name: str) -> ShapeConfig:
+    try:
+        return SHAPES[name]
+    except KeyError:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}") from None
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable dry-run cell; else (False, why)."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "full-attention arch: 512k dense KV is quadratic-regime (see DESIGN.md §Arch-applicability)"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in SHAPES]

@@ -1,0 +1,23 @@
+"""Pilot abstraction (paper §4): service, pilots, compute units, plugin SPI."""
+from repro.core.compute_unit import ComputeUnit, CUState
+from repro.core.description import PilotComputeDescription
+from repro.core.plugin import Lease, ManagerPlugin, plugin_class, register_plugin, registered_plugins
+from repro.core.service import DevicePool, Pilot, PilotComputeService, PilotState
+
+# importing engines registers the built-in plugins (kafka/spark/flink/dask analogs)
+import repro.engines  # noqa: E402,F401
+
+__all__ = [
+    "CUState",
+    "ComputeUnit",
+    "DevicePool",
+    "Lease",
+    "ManagerPlugin",
+    "Pilot",
+    "PilotComputeDescription",
+    "PilotComputeService",
+    "PilotState",
+    "plugin_class",
+    "register_plugin",
+    "registered_plugins",
+]

@@ -1,0 +1,88 @@
+"""Heartbeats + failure detection for pilot agents (paper §4: "continuously
+monitors the framework adding a level of fault tolerance")."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+
+class HeartbeatMonitor:
+    """Each watched pilot gets an agent thread emitting heartbeats; a monitor
+    thread flags pilots whose heartbeat is older than ``timeout``."""
+
+    def __init__(self, interval: float = 0.2, timeout: float = 2.0):
+        self.interval = interval
+        self.timeout = timeout
+        self._beats: dict[int, float] = {}
+        self._dead: set[int] = set()
+        self._agents: dict[int, threading.Event] = {}
+        self._callbacks: list[Callable[[Any], None]] = []
+        self._watched: dict[int, Any] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._monitor = threading.Thread(target=self._run, daemon=True)
+        self._monitor.start()
+
+    def on_failure(self, cb: Callable[[Any], None]) -> None:
+        self._callbacks.append(cb)
+
+    def watch(self, pilot: Any) -> None:
+        stop = threading.Event()
+        key = id(pilot)
+        with self._lock:
+            self._beats[key] = time.monotonic()
+            self._agents[key] = stop
+            self._watched[key] = pilot
+
+        def agent():
+            while not stop.is_set() and not self._stop.is_set():
+                with self._lock:
+                    if key not in self._dead:
+                        self._beats[key] = time.monotonic()
+                stop.wait(self.interval)
+
+        threading.Thread(target=agent, daemon=True).start()
+
+    def unwatch(self, pilot: Any) -> None:
+        key = id(pilot)
+        with self._lock:
+            ev = self._agents.pop(key, None)
+            self._beats.pop(key, None)
+            self._watched.pop(key, None)
+            self._dead.discard(key)
+        if ev:
+            ev.set()
+
+    def mark_dead(self, pilot: Any) -> None:
+        """Failure injection: the agent stops heartbeating."""
+        with self._lock:
+            self._dead.add(id(pilot))
+
+    def is_alive(self, pilot: Any) -> bool:
+        with self._lock:
+            beat = self._beats.get(id(pilot))
+        return beat is not None and (time.monotonic() - beat) < self.timeout
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            now = time.monotonic()
+            stale = []
+            with self._lock:
+                for key, beat in list(self._beats.items()):
+                    if key in self._dead and now - beat > self.timeout:
+                        stale.append(self._watched.get(key))
+            for pilot in stale:
+                for cb in self._callbacks:
+                    try:
+                        cb(pilot)
+                    except Exception:
+                        pass
+                if pilot is not None:
+                    self.unwatch(pilot)
+            self._stop.wait(self.interval)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for ev in list(self._agents.values()):
+            ev.set()

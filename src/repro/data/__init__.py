@@ -1,0 +1,4 @@
+from repro.data.prefetch import DevicePrefetcher
+from repro.data.batching import batch_messages
+
+__all__ = ["DevicePrefetcher", "batch_messages"]

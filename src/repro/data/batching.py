@@ -1,0 +1,30 @@
+"""Assemble device batches from broker messages (shard-aware)."""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+
+def batch_messages(
+    msgs: Sequence, *, batch: int, seq_len: int | None = None, pad_value: int = 0
+) -> np.ndarray:
+    """Concatenate npy message payloads to exactly (batch, ...) rows.
+
+    Short windows are padded by repeating the last row (streaming windows
+    are size-variable; the step function is compiled for a fixed shape).
+    """
+    arrays = [np.asarray(m.value) for m in msgs]
+    data = np.concatenate(arrays, axis=0)
+    if seq_len is not None:
+        data = data[:, :seq_len]
+    if len(data) >= batch:
+        return data[:batch]
+    reps = np.repeat(data[-1:], batch - len(data), axis=0)
+    return np.concatenate([data, reps], axis=0)
+
+
+def shard_batch(batch: Any, shardings: Any):
+    """Place a host batch tree onto its target shardings."""
+    return jax.device_put(batch, shardings)

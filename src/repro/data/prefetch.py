@@ -1,0 +1,46 @@
+"""Double-buffered host->device prefetch.
+
+Keeps ``depth`` batches in flight so host-side deserialization/assembly
+overlaps device compute — the data-pipeline side of the paper's "balance
+production and processing" requirement.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+
+
+class DevicePrefetcher:
+    def __init__(self, it: Iterator[Any], *, shardings: Any = None, depth: int = 2):
+        self._it = it
+        self._shardings = shardings
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            for item in self._it:
+                if self._shardings is not None:
+                    item = jax.device_put(item, self._shardings)
+                self._q.put(item)
+        except BaseException as e:  # surfaced on next()
+            self._error = e
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self) -> "DevicePrefetcher":
+        return self
+
+    def __next__(self) -> Any:
+        item = self._q.get()
+        if item is self._done:
+            if self._error:
+                raise self._error
+            raise StopIteration
+        return item

@@ -1,0 +1,14 @@
+"""Processing-engine plugins. Importing this package registers them all."""
+from repro.engines.broker_plugin import BrokerPlugin
+from repro.engines.continuous import ContinuousPlugin, ContinuousStream
+from repro.engines.microbatch import MicroBatchPlugin, MicroBatchStream
+from repro.engines.taskpool import TaskPoolPlugin
+
+__all__ = [
+    "BrokerPlugin",
+    "ContinuousPlugin",
+    "ContinuousStream",
+    "MicroBatchPlugin",
+    "MicroBatchStream",
+    "TaskPoolPlugin",
+]

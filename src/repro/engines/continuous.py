@@ -1,0 +1,174 @@
+"""Continuous (per-record) streaming engine — the Flink analog.
+
+Processes records as they arrive with *event-time* windowing: records are
+assigned to tumbling/sliding/session windows by their timestamps, buffered
+per (key, window), and fired when the watermark (max event time − allowed
+lateness) passes the window end. Late records are counted and dropped
+(paper §2.1: "native stream engines ... more advanced windowing").
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.broker.cluster import BrokerCluster
+from repro.broker.consumer import Consumer, ConsumerGroup, Message
+from repro.core.compute_unit import ComputeUnit
+from repro.core.plugin import Lease, ManagerPlugin, register_plugin
+from repro.streaming.windows import SessionWindow, WatermarkTracker
+
+
+@dataclass
+class ContinuousStats:
+    records: int = 0
+    fired_windows: int = 0
+    late_records: int = 0
+    per_record_latency: list = field(default_factory=list)
+
+
+class ContinuousStream:
+    def __init__(
+        self,
+        cluster: BrokerCluster,
+        topic: str,
+        *,
+        group: str,
+        assigner,
+        window_fn: Callable[[Any, tuple, list], Any],
+        key_fn: Callable[[Message], Any] = lambda m: None,
+        allowed_lateness: float = 0.0,
+        emit: Callable[[Any], None] | None = None,
+    ):
+        self.cluster = cluster
+        self.topic = topic
+        self.group = ConsumerGroup(cluster, group, topic)
+        self.consumer = Consumer(cluster, self.group, member_id=f"{group}-cont")
+        self.assigner = assigner
+        self.window_fn = window_fn
+        self.key_fn = key_fn
+        self.emit = emit or (lambda out: None)
+        self.watermarks = WatermarkTracker(allowed_lateness)
+        self.stats = ContinuousStats()
+        self._buffers: dict[tuple, list] = defaultdict(list)  # (key, window) -> msgs
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._fired = threading.Condition()
+        self._error: BaseException | None = None
+
+    def _ingest(self, msg: Message) -> None:
+        ts = msg.timestamp
+        if self.watermarks.is_late(ts):
+            self.stats.late_records += 1
+            return
+        self.watermarks.observe(ts)
+        key = self.key_fn(msg)
+        if isinstance(self.assigner, SessionWindow):
+            windows = self.assigner.assign(ts, key)
+            # session merge: fold any overlapping buffered window into the merged one
+            merged = windows[0]
+            for (k, w) in list(self._buffers):
+                if k == key and w != merged and not (w[1] <= merged[0] or w[0] >= merged[1]):
+                    self._buffers[(key, merged)].extend(self._buffers.pop((k, w)))
+        else:
+            windows = self.assigner.assign(ts)
+        for w in windows:
+            self._buffers[(key, w)].append(msg)
+        self.stats.records += 1
+        self.stats.per_record_latency.append(time.time() - ts)
+
+    def _fire_ready(self) -> None:
+        wm = self.watermarks.watermark
+        ready = [(k, w) for (k, w) in self._buffers if w[1] <= wm]
+        for key, w in sorted(ready, key=lambda kw: kw[1][1]):
+            msgs = self._buffers.pop((key, w))
+            out = self.window_fn(key, w, msgs)
+            self.emit(out)
+            self.stats.fired_windows += 1
+        if ready:
+            with self._fired:
+                self._fired.notify_all()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                msgs = self.consumer.poll(max_records=256, timeout=0.05)
+                for m in msgs:
+                    self._ingest(m)
+                self._fire_ready()
+                if msgs:
+                    self.consumer.commit()
+            except BaseException as e:
+                self._error = e
+                break
+
+    def start(self) -> "ContinuousStream":
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def await_windows(self, n: int, timeout: float = 30.0) -> None:
+        deadline = time.monotonic() + timeout
+        with self._fired:
+            while self.stats.fired_windows < n:
+                if self._error:
+                    raise self._error
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(f"{self.stats.fired_windows}/{n} windows fired")
+                self._fired.wait(min(remaining, 0.2))
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+        if self._error:
+            raise self._error
+
+
+@register_plugin("continuous")
+@register_plugin("flink")  # paper naming convenience
+class ContinuousPlugin(ManagerPlugin):
+    USES_DEVICES = True
+
+    def __init__(self, pcd):
+        super().__init__(pcd)
+        self.devices: list = []
+        self.streams: list[ContinuousStream] = []
+        self._ready = threading.Event()
+
+    def submit_job(self, lease: Lease) -> None:
+        self.devices = list(lease.devices)
+        self._ready.set()
+
+    def wait(self) -> None:
+        self._ready.wait()
+
+    def extend(self, lease: Lease) -> None:
+        self.devices.extend(lease.devices)
+
+    def shrink(self, lease: Lease) -> None:
+        for d in lease.devices:
+            if d in self.devices:
+                self.devices.remove(d)
+
+    def get_context(self, configuration: dict | None = None) -> "ContinuousPlugin":
+        return self
+
+    def run_cu(self, cu: ComputeUnit) -> ComputeUnit:
+        threading.Thread(target=cu.run, daemon=True).start()
+        return cu
+
+    def cancel(self) -> None:
+        for s in self.streams:
+            try:
+                s.stop()
+            except Exception:
+                pass
+
+    def stream(self, cluster: BrokerCluster, topic: str, **kw) -> ContinuousStream:
+        s = ContinuousStream(cluster, topic, **kw)
+        self.streams.append(s)
+        return s

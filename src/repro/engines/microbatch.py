@@ -1,0 +1,235 @@
+"""Micro-batch streaming engine (Spark-Streaming analog) as a pilot plugin.
+
+Discretized-stream semantics: the consumer drains a window of records from
+the broker, assembles a batch, and applies a (usually jitted) processing
+function carrying state (model params, centroids, ...). Provides:
+
+* PID backpressure (streaming/rate_control.py) bounding per-batch ingestion;
+* exactly-once: state checkpoint then offset commit, atomically ordered —
+  recovery restores the checkpoint and rewinds to committed offsets;
+* elastic rescale: extension pilots add devices; the processor's
+  ``on_rescale`` hook re-shards live state (DESIGN.md §2 "resharding, not
+  node hand-off").
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.broker.cluster import BrokerCluster
+from repro.broker.consumer import Consumer, ConsumerGroup, Message
+from repro.core.compute_unit import ComputeUnit
+from repro.core.plugin import Lease, ManagerPlugin, register_plugin
+from repro.streaming.rate_control import PIDRateController
+
+
+@dataclass
+class BatchMetrics:
+    batch_id: int
+    n_records: int
+    bytes: int
+    processing_delay: float
+    scheduling_delay: float
+    end_to_end_latency: float  # now - oldest record timestamp
+
+
+@dataclass
+class StreamStats:
+    batches: int = 0
+    records: int = 0
+    bytes: int = 0
+    processing_time: float = 0.0
+    history: list = field(default_factory=list)
+
+    @property
+    def records_per_sec(self) -> float:
+        return self.records / self.processing_time if self.processing_time else 0.0
+
+
+class MicroBatchStream:
+    """One (topic -> processing fn) pipeline."""
+
+    def __init__(
+        self,
+        cluster: BrokerCluster,
+        topic: str,
+        *,
+        group: str,
+        process_fn: Callable[[Any, list[Message]], Any],
+        state: Any = None,
+        batch_interval: float = 0.5,
+        max_batch_records: int = 4096,
+        backpressure: bool = True,
+        checkpoint_fn: Callable[[Any, dict[int, int]], None] | None = None,
+        checkpoint_every: int = 1,
+        deserialize: bool = True,
+    ):
+        self.cluster = cluster
+        self.topic = topic
+        self.group = ConsumerGroup(cluster, group, topic)
+        self.consumer = Consumer(cluster, self.group, member_id=f"{group}-engine", deserialize=deserialize)
+        self.process_fn = process_fn
+        self.state = state
+        self.batch_interval = batch_interval
+        self.max_batch_records = max_batch_records
+        self.controller = PIDRateController(batch_interval) if backpressure else None
+        self.checkpoint_fn = checkpoint_fn
+        self.checkpoint_every = checkpoint_every
+        self.stats = StreamStats()
+        self.on_rescale: Callable[[Any], Any] | None = None
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._batch_id = 0
+        self._error: BaseException | None = None
+        self._batch_done = threading.Condition()
+
+    # ---- loop -------------------------------------------------------------
+
+    def _run_one_batch(self) -> int:
+        limit = self.max_batch_records
+        if self.controller is not None and self.stats.batches > 0:
+            limit = min(limit, self.controller.max_records_per_batch)
+        # discretized-stream semantics: the window accumulates for the full
+        # batch interval before processing fires (records wait ~window/2 on
+        # average — the latency/throughput trade-off of paper Fig. 7)
+        window_end = time.monotonic() + self.batch_interval
+        msgs: list[Message] = []
+        while len(msgs) < limit:
+            remaining = window_end - time.monotonic()
+            if remaining <= 0:
+                break
+            got = self.consumer.poll(max_records=limit - len(msgs), timeout=remaining)
+            msgs.extend(got)
+        if not msgs:
+            return 0
+        scheduling_delay = max(time.monotonic() - window_end, 0.0)
+        t0 = time.monotonic()
+        self.state = self.process_fn(self.state, msgs)
+        dt = time.monotonic() - t0
+
+        self._batch_id += 1
+        if self.checkpoint_fn and self._batch_id % self.checkpoint_every == 0:
+            self.checkpoint_fn(self.state, self.consumer.positions())
+        self.consumer.commit()  # after checkpoint -> exactly-once on replay
+
+        if self.controller is not None:
+            self.controller.update(len(msgs), dt, scheduling_delay)
+        now = time.time()
+        self.stats.batches += 1
+        self.stats.records += len(msgs)
+        self.stats.processing_time += dt
+        self.stats.history.append(
+            BatchMetrics(
+                self._batch_id, len(msgs), 0, dt, scheduling_delay,
+                now - min(m.timestamp for m in msgs),
+            )
+        )
+        with self._batch_done:
+            self._batch_done.notify_all()
+        return len(msgs)
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                n = self._run_one_batch()
+            except BaseException as e:  # surfaced on await/stop
+                self._error = e
+                break
+            if n == 0:
+                time.sleep(0.01)
+
+    # ---- control ------------------------------------------------------------
+
+    def start(self) -> "MicroBatchStream":
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def await_batches(self, n: int, timeout: float = 60.0) -> None:
+        deadline = time.monotonic() + timeout
+        with self._batch_done:
+            while self.stats.batches < n:
+                if self._error:
+                    raise self._error
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(f"only {self.stats.batches}/{n} batches after {timeout}s")
+                self._batch_done.wait(min(remaining, 0.25))
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+        if self._error:
+            raise self._error
+
+    def lag(self) -> dict[int, int]:
+        return self.cluster.lag(self.group.group, self.topic)
+
+    # ---- failure recovery -----------------------------------------------------
+
+    def recover(self, state: Any, offsets: dict[int, int] | None = None) -> None:
+        """Restore from a checkpoint: state + rewind to committed offsets."""
+        self.state = state
+        if offsets:
+            for p, off in offsets.items():
+                self.consumer.seek(p, off)
+        else:
+            self.consumer.rewind_to_committed()
+
+
+@register_plugin("microbatch")
+@register_plugin("spark")  # paper naming convenience
+class MicroBatchPlugin(ManagerPlugin):
+    USES_DEVICES = True
+
+    def __init__(self, pcd):
+        super().__init__(pcd)
+        self.devices: list = []
+        self.streams: list[MicroBatchStream] = []
+        self._ready = threading.Event()
+
+    def submit_job(self, lease: Lease) -> None:
+        self.devices = list(lease.devices)
+        self._ready.set()
+
+    def wait(self) -> None:
+        self._ready.wait()
+
+    def extend(self, lease: Lease) -> None:
+        self.devices.extend(lease.devices)
+        self._rescale()
+
+    def shrink(self, lease: Lease) -> None:
+        for d in lease.devices:
+            if d in self.devices:
+                self.devices.remove(d)
+        self._rescale()
+
+    def _rescale(self) -> None:
+        for s in self.streams:
+            if s.on_rescale is not None:
+                s.state = s.on_rescale(self.devices)
+
+    def get_context(self, configuration: dict | None = None) -> "MicroBatchPlugin":
+        return self
+
+    def run_cu(self, cu: ComputeUnit) -> ComputeUnit:
+        threading.Thread(target=cu.run, daemon=True).start()
+        return cu
+
+    def cancel(self) -> None:
+        for s in self.streams:
+            try:
+                s.stop()
+            except Exception:
+                pass
+
+    # ---- user API (the StreamingContext analog) ------------------------------
+
+    def stream(self, cluster: BrokerCluster, topic: str, **kw) -> MicroBatchStream:
+        s = MicroBatchStream(cluster, topic, **kw)
+        self.streams.append(s)
+        return s

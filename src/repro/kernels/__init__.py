@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots:
+
+* ``kmeans``    — MASA streaming K-Means assignment (paper Table 1)
+* ``tomo``      — forward/back projectors for GridRec & ML-EM (paper §3.2.2)
+* ``attention`` — blocked flash attention for LM serving prefill
+
+Each has ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py`` (jit'd
+wrapper with ref/kernel dispatch) and ``ref.py`` (pure-jnp oracle). Kernels
+are validated on CPU in ``interpret=True`` mode (tests/test_kernels.py).
+"""

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: blocked flash attention (GQA, causal) — the serving
+prefill hot loop.
+
+Grid: (batch, q-head, q-block). Each program holds a (bq, hd) query tile and
+its KV head's full (Skv, hd) K/V panels in VMEM (ops.py enforces the VMEM
+budget), and runs the online-softmax recurrence over KV chunks on the MXU.
+Causal programs early-exit KV chunks beyond their last query row — the same
+schedule as runtime/sharded_attention.py, which is what runs per shard on
+the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bkv, skv, hd, causal, scale):
+    iq = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+    n_blocks = skv // bkv
+    if causal:
+        last_row = iq * bq + bq - 1
+        n_needed = jnp.minimum(last_row // bkv + 1, n_blocks)
+    else:
+        n_needed = n_blocks
+
+    def body(j, carry):
+        acc, m, l = carry
+        k_blk = jax.lax.dynamic_slice(k_ref[0, 0], (j * bkv, 0), (bkv, hd)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(v_ref[0, 0], (j * bkv, 0), (bkv, hd)).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bkv)
+        if causal:
+            q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            k_pos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc = acc * alpha[:, None] + pv
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_needed, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l[:, None], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, KV, Skv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 256,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bkv=bkv, skv=Skv, hd=hd, causal=causal, scale=1.0 / math.sqrt(hd)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, Sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, Skv, hd), lambda b, h, iq: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Skv, hd), lambda b, h, iq: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

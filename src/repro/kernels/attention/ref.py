@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal optional)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Skv, hd); H % KV == 0."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(v.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.kmeans.ops import assign, minibatch_update
+from repro.kernels.kmeans.ref import assign_ref, update_ref
+
+__all__ = ["assign", "assign_ref", "minibatch_update", "update_ref"]

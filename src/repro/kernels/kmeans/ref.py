@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the K-Means assignment step (MASA scoring hot loop).
+
+Paper Table 1: "Model score: assign incoming data to centroids,
+O(num_points * num_clusters)".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def assign_ref(points: jnp.ndarray, centroids: jnp.ndarray):
+    """points: (N, D); centroids: (K, D) -> (labels (N,) int32, dist2 (N,) f32)."""
+    p2 = jnp.sum(points.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (N,1)
+    c2 = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)  # (K,)
+    cross = points.astype(jnp.float32) @ centroids.astype(jnp.float32).T  # (N,K)
+    d2 = p2 - 2.0 * cross + c2[None, :]
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return labels, jnp.min(d2, axis=1)
+
+
+def update_ref(points: jnp.ndarray, labels: jnp.ndarray, k: int):
+    """Mini-batch centroid sums + counts (the model-update step)."""
+    onehot = jnp.zeros((points.shape[0], k), jnp.float32).at[jnp.arange(points.shape[0]), labels].set(1.0)
+    sums = onehot.T @ points.astype(jnp.float32)  # (K, D)
+    counts = onehot.sum(axis=0)  # (K,)
+    return sums, counts

@@ -1,0 +1,15 @@
+from repro.kernels.tomo.ops import backproject, gridrec, mlem, project, shepp_logan
+from repro.kernels.tomo.ref import backproject_ref, gridrec_ref, mlem_ref, project_ref, ramp_filter
+
+__all__ = [
+    "backproject",
+    "backproject_ref",
+    "gridrec",
+    "gridrec_ref",
+    "mlem",
+    "mlem_ref",
+    "project",
+    "project_ref",
+    "ramp_filter",
+    "shepp_logan",
+]

@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers,
+roofline analysis. ``dryrun`` must be run as a fresh process (it forces 512
+host devices before jax initializes)."""

@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (jit accepts in/out shardings),
+  * the program compiles for 256 (single-pod) and 512 (multi-pod) devices,
+  * it fits: ``compiled.memory_analysis()`` (per-device bytes),
+  * the roofline terms: ``cost_analysis()`` + trip-count-corrected HLO
+    analysis (flops / bytes / collective bytes) -> EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import all_cells, cell_supported, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.runtime.steps import build_step
+
+
+def run_cell(
+    arch_name: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    verbose: bool = True,
+    attn: str | None = None,
+    overrides: dict | None = None,
+) -> dict:
+    """Lower+compile one cell; returns the dry-run record."""
+    cfg = get_arch(arch_name)
+    if attn:
+        cfg = cfg.replace(attention_impl=attn)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    model = build_model(cfg)
+
+    rec: dict = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "kind": shape.kind,
+    }
+    t0 = time.time()
+    bundle = build_step(model, mesh, shape)
+    with mesh:
+        lowered = bundle.lower()
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    rec["peak_bytes_per_device"] = (
+        rec["memory"]["argument_bytes"]
+        + rec["memory"]["output_bytes"]
+        + rec["memory"]["temp_bytes"]
+        - rec["memory"]["alias_bytes"]
+    )
+    ca = compiled.cost_analysis()
+    rec["cost_analysis"] = {
+        "flops": float(ca.get("flops", -1)),
+        "bytes_accessed": float(ca.get("bytes accessed", -1)),
+    }
+
+    from repro.runtime.hlo_analysis import analyze_hlo
+
+    # dynamic-trip loops (causal flash KV loop) run ~n_blocks/2 iterations on
+    # the average shard; static loops are parsed exactly
+    bkv = min(cfg.attention_block_kv, shape.seq_len)
+    avg_trips = max(1, round(shape.seq_len / bkv / 2)) if shape.kind != "decode" else 1
+    hlo = analyze_hlo(compiled.as_text(), dynamic_trip_default=avg_trips)
+    rec["hlo"] = {
+        "flops_per_device": hlo.flops,
+        "bytes_per_device": hlo.bytes_moved,
+        "bytes_fused_per_device": hlo.bytes_moved_fused,
+        "collective_bytes_per_device": hlo.collective_bytes,
+        "collectives": hlo.collective_counts,
+        "cpu_upcast_artifact_bytes": hlo.cpu_upcast_artifact_bytes,
+    }
+    # TPU-corrected peak: XLA-CPU upcasts whole bf16 weight stacks to f32
+    # (no native bf16 GEMM) and hoists them; the TPU MXU consumes bf16
+    # directly, so those buffers don't exist there (DESIGN.md §6).
+    rec["peak_bytes_per_device_tpu_est"] = int(
+        rec["peak_bytes_per_device"] - hlo.cpu_upcast_artifact_bytes
+    )
+    if verbose:
+        print(
+            f"[dryrun] {arch_name} x {shape_name} ({rec['mesh']}): "
+            f"compile {rec['compile_s']}s, "
+            f"peak/device {rec['peak_bytes_per_device']/2**30:.2f} GiB "
+            f"(tpu-est {rec['peak_bytes_per_device_tpu_est']/2**30:.2f}), "
+            f"hlo flops/device {hlo.flops:.3e}, coll bytes/device {hlo.collective_bytes:.3e}"
+        )
+        sys.stdout.flush()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--attn", default=None, help="override attention impl (blockwise|flash|ring)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records, failures = [], []
+    for arch, shape in cells:
+        ok, why = cell_supported(arch, shape)
+        if not ok:
+            records.append({"arch": arch, "shape": shape, "skipped": why})
+            print(f"[dryrun] SKIP {arch} x {shape}: {why}")
+            continue
+        for mp in meshes:
+            try:
+                records.append(run_cell(arch, shape, multi_pod=mp, attn=args.attn))
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                failures.append((arch, shape, mp, repr(e)))
+                records.append(
+                    {"arch": arch, "shape": shape, "mesh": "2x16x16" if mp else "16x16", "error": repr(e)}
+                )
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_)
+        sys.exit(1)
+    print(f"[dryrun] all {len(records)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

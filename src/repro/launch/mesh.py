@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device state; the dry-run sets
+``xla_force_host_platform_device_count`` before calling it.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 ("data","model"). Multi-pod: 2x16x16 ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(n_model: int = 1, n_data: int | None = None) -> Mesh:
+    """Mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    if n_data is None:
+        n_data = n // n_model
+    return make_mesh((n_data, n_model), ("data", "model"))

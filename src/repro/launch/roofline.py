@@ -1,0 +1,185 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (per-device; the SPMD-partitioned HLO has per-device shapes, so the
+trip-count-corrected analyzer outputs are already per-chip):
+
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s)
+    collective = collective_bytes / link_bw        (~50 GB/s ICI)
+
+MODEL_FLOPS = 6*N*D (train, dense), 6*N_active*D (train, MoE), 2*N*D
+(inference), D = tokens processed per step. The roofline fraction is
+ideal_compute_time / max(term) — the score a perfect overlap schedule would
+achieve given the compiled ops.
+
+  PYTHONPATH=src python -m repro.launch.roofline --in benchmarks/dryrun_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_PARAM_CACHE: dict[str, tuple[int, int]] = {}
+
+
+def param_counts(arch: str) -> tuple[int, int]:
+    if arch not in _PARAM_CACHE:
+        from repro.configs.registry import get_arch
+
+        cfg = get_arch(arch)
+        _PARAM_CACHE[arch] = (cfg.param_count(), cfg.active_param_count())
+    return _PARAM_CACHE[arch]
+
+
+def model_flops(arch: str, shape_kind: str, seq_len: int, global_batch: int, chips: int) -> float:
+    n_total, n_active = param_counts(arch)
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens / chips
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch / chips
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    fraction: float
+    #: decode shapes are inherently memory-bound: efficiency is measured
+    #: against the *memory* roofline (params + cache read once per step)
+    mem_fraction: float = 0.0
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def score(self) -> float:
+        """Roofline fraction on the appropriate axis for the shape kind."""
+        return self.mem_fraction if self.shape.startswith(("decode", "long")) else self.fraction
+
+
+_IDEAL_BYTES_CACHE: dict[tuple[str, str], float] = {}
+
+
+def ideal_decode_bytes_per_chip(arch: str, shape_name: str, chips: int) -> float:
+    """Minimum HBM traffic per decode step: param shard + KV/state shard,
+    each read once."""
+    key = (arch, shape_name)
+    if key not in _IDEAL_BYTES_CACHE:
+        from repro.configs.registry import get_arch, get_shape
+        from repro.models import build_model
+        from repro.utils.tree import tree_bytes
+
+        cfg = get_arch(arch)
+        model = build_model(cfg)
+        shape = get_shape(shape_name)
+        _IDEAL_BYTES_CACHE[key] = float(
+            tree_bytes(model.param_struct()) + tree_bytes(model.cache_struct(shape))
+        )
+    return _IDEAL_BYTES_CACHE[key] / chips
+
+
+_SUGGESTIONS = {
+    "compute": "reduce redundant compute: selective remat / causal-skip attention / smaller capacity factor",
+    "memory": "raise arithmetic intensity: larger per-chip batch, fused kernels, bf16 end-to-end",
+    "collective": "cut collective volume: reduce-scatter instead of all-gather, ring attention, quantized cross-pod grads",
+}
+
+
+def analyze_record(rec: dict) -> RooflineRow | None:
+    if "hlo" not in rec:
+        return None
+    from repro.configs.registry import get_shape
+
+    shape = get_shape(rec["shape"])
+    hlo = rec["hlo"]
+    compute = hlo["flops_per_device"] / PEAK_FLOPS
+    # fused-model bytes = TPU-realistic HBM traffic; the conservative
+    # every-op model is reported alongside as the upper bound
+    memory = hlo.get("bytes_fused_per_device", hlo["bytes_per_device"]) / HBM_BW
+    collective = hlo["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], shape.kind, shape.seq_len, shape.global_batch, rec["chips"])
+    ideal = mf / PEAK_FLOPS
+    fraction = ideal / max(max(terms.values()), 1e-30)
+    mem_fraction = 0.0
+    if shape.kind == "decode":
+        ideal_mem = ideal_decode_bytes_per_chip(rec["arch"], rec["shape"], rec["chips"]) / HBM_BW
+        mem_fraction = ideal_mem / max(max(memory, collective), 1e-30)
+    return RooflineRow(
+        rec["arch"], rec["shape"], rec["mesh"], compute, memory, collective,
+        dominant, mf, hlo["flops_per_device"], fraction, mem_fraction,
+    )
+
+
+def render_markdown(rows: list[RooflineRow]) -> str:
+    out = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | bottleneck | MODEL/HLO flops | roofline fraction* |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        frac = f"{r.score:.1%}" + (" (mem)" if r.shape.startswith(("decode", "long")) else "")
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | {r.memory_s:.3e} "
+            f"| {r.collective_s:.3e} | **{r.dominant}** | {r.useful_ratio:.2f} | {frac} |"
+        )
+    out.append("")
+    out.append("\\* train/prefill: fraction of the bf16 compute roofline; "
+               "decode: fraction of the HBM roofline (params+cache read once per step).")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="infile", required=True)
+    ap.add_argument("--out", default=None, help="write markdown here")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    with open(args.infile) as f:
+        records = json.load(f)
+    rows, skips = [], []
+    for rec in records:
+        if "skipped" in rec:
+            skips.append(rec)
+            continue
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    md = render_markdown(rows)
+    md += "\n\nSkipped cells:\n" + "\n".join(
+        f"- {s['arch']} x {s['shape']}: {s['skipped']}" for s in skips
+    )
+    md += "\n\nSuggested lever per bottleneck:\n" + "\n".join(
+        f"- {k}: {v}" for k, v in _SUGGESTIONS.items()
+    )
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+        print(f"wrote {args.out}")
+    else:
+        print(md)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([r.__dict__ | {"useful_ratio": r.useful_ratio} for r in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Streaming Mini-Apps (paper §5): MASS sources + MASA processors."""
+from repro.miniapps.mass import (
+    SOURCES,
+    KMeansClusterSource,
+    KMeansStaticSource,
+    LightsourceTemplateSource,
+    SourceConfig,
+    StreamSource,
+    TokenSource,
+)
+from repro.miniapps.masa import (
+    PROCESSORS,
+    LMServeApp,
+    LMTrainApp,
+    ReconstructionApp,
+    StreamingKMeans,
+)
+
+__all__ = [
+    "KMeansClusterSource",
+    "KMeansStaticSource",
+    "LMServeApp",
+    "LMTrainApp",
+    "LightsourceTemplateSource",
+    "PROCESSORS",
+    "ReconstructionApp",
+    "SOURCES",
+    "SourceConfig",
+    "StreamSource",
+    "StreamingKMeans",
+    "TokenSource",
+]

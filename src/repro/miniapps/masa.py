@@ -1,0 +1,232 @@
+"""MASA — Mini-App for Streaming Analysis (paper §5).
+
+Pluggable processors for the micro-batch engine:
+
+* ``StreamingKMeans``   — score + decayed centroid update (paper Table 1)
+* ``ReconstructionApp`` — GridRec / ML-EM per frame (paper §3.2.2, Fig. 9)
+* ``LMTrainApp``        — streaming LM training (micro-batch train_step)
+* ``LMServeApp``        — streaming LM inference (prefill/decode)
+
+Each exposes ``process(state, msgs) -> state`` for
+``MicroBatchPlugin.stream`` plus an ``on_rescale(devices)`` hook used by the
+elastic path (live state resharding).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import kmeans as kmeans_ops
+from repro.kernels import tomo as tomo_ops
+
+
+@dataclass
+class AppStats:
+    messages: int = 0
+    items: int = 0
+    batches: int = 0
+    compute_time: float = 0.0
+
+    @property
+    def msgs_per_sec(self) -> float:
+        return self.messages / self.compute_time if self.compute_time else 0.0
+
+
+class StreamingKMeans:
+    """Assign incoming points to centroids, update the model with decay."""
+
+    def __init__(self, n_clusters: int = 10, dim: int = 3, *, decay: float = 0.9,
+                 use_kernel: bool = False, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.centroids = jnp.asarray(rng.normal(size=(n_clusters, dim)), jnp.float32)
+        self.decay = decay
+        self.use_kernel = use_kernel
+        self.stats = AppStats()
+        self._step = jax.jit(
+            lambda pts, cen: kmeans_ops.minibatch_update(
+                pts, cen, decay=decay, use_kernel=False
+            )
+        )
+
+    def process(self, state, msgs):
+        centroids = state if state is not None else self.centroids
+        pts = jnp.asarray(np.concatenate([np.asarray(m.value) for m in msgs]), jnp.float32)
+        t0 = time.monotonic()
+        centroids, labels, inertia = self._step(pts, centroids)
+        centroids.block_until_ready()
+        self.stats.compute_time += time.monotonic() - t0
+        self.stats.messages += len(msgs)
+        self.stats.items += pts.shape[0]
+        self.stats.batches += 1
+        self.inertia = float(inertia) / max(pts.shape[0], 1)
+        return centroids
+
+    def on_rescale(self, devices):
+        # centroids are tiny: re-placement is a device_put
+        def f(state):
+            return jax.device_put(state, devices[0]) if state is not None else state
+        return f
+
+
+class ReconstructionApp:
+    """Per-frame tomographic reconstruction (GridRec or ML-EM)."""
+
+    def __init__(self, algorithm: str = "gridrec", *, n: int = 64, mlem_iters: int = 4,
+                 use_kernel: bool = False):
+        assert algorithm in ("gridrec", "mlem")
+        self.algorithm = algorithm
+        self.n = n
+        self.stats = AppStats()
+        if algorithm == "gridrec":
+            self._rec = jax.jit(
+                lambda sino, angles: tomo_ops.gridrec(sino, angles, n, use_kernel=False)
+            )
+        else:
+            self._rec = jax.jit(
+                lambda sino, angles: tomo_ops.mlem(sino, angles, n, iters=mlem_iters, use_kernel=False)
+            )
+
+    def process(self, state, msgs):
+        recon = None
+        t0 = time.monotonic()
+        for m in msgs:
+            sino = jnp.asarray(np.asarray(m.value), jnp.float32)
+            a = sino.shape[0]
+            angles = jnp.linspace(0, jnp.pi, a, endpoint=False)
+            recon = self._rec(sino, angles)
+        if recon is not None:
+            recon.block_until_ready()
+        self.stats.compute_time += time.monotonic() - t0
+        self.stats.messages += len(msgs)
+        self.stats.batches += 1
+        return recon  # last reconstruction = state (exposed for inspection)
+
+
+class LMTrainApp:
+    """Streaming LM training: consume token messages, run train steps.
+
+    State = (params, opt_state); rescale re-lowers the step on a new mesh
+    and device_puts the live state (checkpoint-free migration).
+    """
+
+    def __init__(self, cfg, *, mesh=None, opt_cfg=None, seqs_per_step: int = 8, seq_len: int = 128):
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import build_model
+        from repro.configs.base import ShapeConfig
+        from repro.runtime.steps import build_train_step
+
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.mesh = mesh or make_local_mesh()
+        self.shape = ShapeConfig("stream", seq_len, seqs_per_step, "train")
+        self.opt_cfg = opt_cfg
+        self.bundle = build_train_step(self.model, self.mesh, self.shape, opt_cfg, donate=False)
+        self.stats = AppStats()
+        self.losses: list[float] = []
+
+    def init_state(self, seed: int = 0):
+        from repro.runtime.optimizer import Optimizer, OptimizerConfig
+
+        params = self.model.init(jax.random.key(seed))
+        opt = Optimizer(self.opt_cfg or OptimizerConfig(name=self.cfg.optimizer))
+        return {"params": params, "opt": opt.init(params)}
+
+    def process(self, state, msgs):
+        if state is None:
+            state = self.init_state()
+        toks = np.concatenate([np.asarray(m.value) for m in msgs])  # (n_seqs, S)
+        B = self.shape.global_batch
+        n_steps = len(toks) // B
+        t0 = time.monotonic()
+        for s in range(max(n_steps, 1)):
+            batch = toks[s * B : (s + 1) * B]
+            if len(batch) < B:  # pad the tail window
+                batch = np.concatenate([batch, np.zeros((B - len(batch), batch.shape[1] if batch.size else self.shape.seq_len), np.int32)])
+            params, opt, metrics = self.bundle.fn(
+                state["params"], state["opt"], {"tokens": jnp.asarray(batch, jnp.int32)}
+            )
+            state = {"params": params, "opt": opt}
+        jax.block_until_ready(state["params"])
+        self.losses.append(float(metrics["loss"]))
+        self.stats.compute_time += time.monotonic() - t0
+        self.stats.messages += len(msgs)
+        self.stats.items += int(len(toks)) * self.shape.seq_len
+        self.stats.batches += 1
+        return state
+
+    def on_rescale(self, devices):
+        """Elastic: rebuild mesh over the new device set, reshard live state."""
+        from repro.launch.mesh import make_mesh
+        from repro.runtime.steps import build_train_step
+
+        def f(state):
+            n = len(devices)
+            self.mesh = make_mesh((n, 1), ("data", "model"))
+            self.bundle = build_train_step(self.model, self.mesh, self.shape, self.opt_cfg, donate=False)
+            if state is not None:
+                p_sh, o_sh, _ = self.bundle.in_shardings
+                state = {
+                    "params": jax.device_put(state["params"], p_sh),
+                    "opt": jax.device_put(state["opt"], o_sh),
+                }
+            return state
+
+        return f
+
+
+class LMServeApp:
+    """Streaming LM inference: prefill each request batch, decode n tokens."""
+
+    def __init__(self, cfg, *, mesh=None, prompt_len: int = 32, gen_tokens: int = 8, batch: int = 4):
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import build_model
+        from repro.configs.base import ShapeConfig
+
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.mesh = mesh or make_local_mesh()
+        self.prompt_len = prompt_len
+        self.gen_tokens = gen_tokens
+        self.batch = batch
+        self.stats = AppStats()
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode)
+
+    def process(self, state, msgs):
+        params = state  # serving state = model params
+        t0 = time.monotonic()
+        for m in msgs:
+            toks = jnp.asarray(np.asarray(m.value)[: self.batch, : self.prompt_len], jnp.int32)
+            logits, cache = self._prefill(params, {"tokens": toks})
+            # grow cache for generated tokens
+            cache = jax.tree.map(
+                lambda c: jnp.pad(c, [(0, 0)] * 2 + [(0, self.gen_tokens)] + [(0, 0)] * (c.ndim - 3))
+                if c.ndim >= 4 else c,
+                cache,
+            )
+            pos = jnp.full((toks.shape[0],), self.prompt_len - 1, jnp.int32)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            for _ in range(self.gen_tokens - 1):
+                pos = pos + 1
+                logits, cache = self._decode(params, cache, {"tokens": tok, "positions": pos})
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok.block_until_ready()
+            self.stats.items += int(toks.shape[0]) * self.gen_tokens
+        self.stats.compute_time += time.monotonic() - t0
+        self.stats.messages += len(msgs)
+        self.stats.batches += 1
+        return params
+
+
+PROCESSORS = {
+    "kmeans": StreamingKMeans,
+    "gridrec": lambda **kw: ReconstructionApp("gridrec", **kw),
+    "mlem": lambda **kw: ReconstructionApp("mlem", **kw),
+    "lm_train": LMTrainApp,
+    "lm_serve": LMServeApp,
+}

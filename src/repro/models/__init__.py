@@ -1,0 +1,28 @@
+"""Model zoo: ``build_model(cfg) -> BaseModel`` dispatch by family."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.base import BaseModel
+
+
+def build_model(cfg: ArchConfig) -> BaseModel:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import DecoderLM
+
+        return DecoderLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.rwkv6 import Rwkv6LM
+
+        return Rwkv6LM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.zamba import ZambaLM
+
+        return ZambaLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+__all__ = ["BaseModel", "build_model"]

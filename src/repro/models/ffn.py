@@ -1,0 +1,30 @@
+"""Feed-forward blocks: gated (SwiGLU) MLP used by every transformer arch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+def mlp_specs(d_model: int, d_ff: int, n_layers: int | None, dtype, *, gated: bool = True) -> dict:
+    """(Gated) MLP params; optionally stacked over a leading layer axis."""
+    lead = () if n_layers is None else (n_layers,)
+    lax = () if n_layers is None else ("layers",)
+    specs = {
+        "w_up": ParamSpec(lead + (d_model, d_ff), lax + ("embed", "mlp"), dtype),
+        "w_down": ParamSpec(lead + (d_ff, d_model), lax + ("mlp", "embed"), dtype),
+    }
+    if gated:
+        specs["w_gate"] = ParamSpec(lead + (d_model, d_ff), lax + ("embed", "mlp"), dtype)
+    return specs
+
+
+def mlp_apply(p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    x = x.astype(compute_dtype)
+    u = x @ p["w_up"].astype(compute_dtype)
+    if "w_gate" in p:  # SwiGLU
+        u = jax.nn.silu(x @ p["w_gate"].astype(compute_dtype)) * u
+    else:  # classic 2-matrix MLP (starcoder2)
+        u = jax.nn.gelu(u)
+    return u @ p["w_down"].astype(compute_dtype)

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: top-k routing with grouped dense dispatch.
+
+GSPMD-friendly formulation (GShard/Switch style): tokens are reshaped into
+(groups, group_size); routing produces a dispatch one-hot
+(groups, group_size, experts, capacity) and a combine tensor of the same
+shape, so dispatch/return are einsums that lower to all-to-alls when the
+expert dim is sharded on "model" and groups on ("pod","data").
+
+Capacity dropping is the standard trade-off: tokens routed beyond
+``capacity = group_size * top_k / n_experts * capacity_factor`` fall through
+on the residual path. The auxiliary load-balance loss (Switch §2.2) keeps
+drop rates low.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+def moe_specs(cfg, n_layers: int | None) -> dict:
+    lead = () if n_layers is None else (n_layers,)
+    lax = () if n_layers is None else ("layers",)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    specs = {
+        "router": ParamSpec(lead + (d, e), lax + ("embed", None), jnp.float32, init="small"),
+        "w_gate": ParamSpec(lead + (e, d, f), lax + ("experts", "embed", "mlp"), dt),
+        "w_up": ParamSpec(lead + (e, d, f), lax + ("experts", "embed", "mlp"), dt),
+        "w_down": ParamSpec(lead + (e, f, d), lax + ("experts", "mlp", "embed"), dt),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        specs.update(
+            shared_gate=ParamSpec(lead + (d, fs), lax + ("embed", "mlp"), dt),
+            shared_up=ParamSpec(lead + (d, fs), lax + ("embed", "mlp"), dt),
+            shared_down=ParamSpec(lead + (fs, d), lax + ("mlp", "embed"), dt),
+        )
+    return specs
+
+
+def moe_capacity(group_size: int, top_k: int, n_experts: int, capacity_factor: float) -> int:
+    c = int(math.ceil(group_size * top_k / n_experts * capacity_factor))
+    return max(c, 4)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg, compute_dtype) -> tuple[jax.Array, jax.Array]:
+    """Apply the MoE FFN. ``x``: (B, S, d). Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    gs = min(cfg.moe_group_size, T)
+    while T % gs:  # largest divisor of T (decode windows are small/ragged)
+        gs -= 1
+    G = T // gs
+    C = moe_capacity(gs, K, E, cfg.capacity_factor)
+
+    xt = x.reshape(G, gs, d)
+    # router matmul in compute dtype: an f32 cast of xt here would make the
+    # *entire* upstream cotangent chain f32 (2x grad memory, measured on the
+    # 1T config); softmax still runs in f32
+    logits = (xt.astype(compute_dtype) @ p["router"].astype(compute_dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection, one expert at a time (keeps masks small and static)
+    gates = jnp.zeros((G, gs, E), jnp.float32)
+    masked = probs
+    for _ in range(K):
+        idx = jnp.argmax(masked, axis=-1)  # (G,gs)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+        gates = gates + onehot * probs
+        masked = masked * (1.0 - onehot)
+    # renormalize combined gate weights over selected experts
+    denom = jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    gates = gates / denom
+
+    # capacity assignment: position of each token in its expert's buffer
+    sel = (gates > 0).astype(jnp.float32)  # (G,gs,E)
+    pos_in_expert = jnp.cumsum(sel, axis=1) * sel - 1.0  # (G,gs,E), -1 if unrouted
+    keep = (pos_in_expert >= 0) & (pos_in_expert < C)
+    slot = jnp.clip(pos_in_expert, 0, C - 1).astype(jnp.int32)
+    slot_onehot = jax.nn.one_hot(slot, C, dtype=jnp.float32) * keep[..., None]
+    dispatch = slot_onehot  # (G,gs,E,C)
+    combine = dispatch * gates[..., None]
+
+    cd = compute_dtype
+    from repro.runtime.sharding import constrain
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(cd), xt.astype(cd))  # (G,E,C,d)
+    xe = constrain(xe, ("moe_groups", "experts", None, None))  # dispatch all-to-all
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(cd))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(cd))
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cd))  # (G,E,C,d)
+    ye = constrain(ye, ("moe_groups", "experts", None, None))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(cd), ye)  # (G,gs,d)
+    y = y.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        xs = x.astype(cd)
+        hs = jax.nn.silu(xs @ p["shared_gate"].astype(cd)) * (xs @ p["shared_up"].astype(cd))
+        y = y + hs @ p["shared_down"].astype(cd)
+
+    # Switch-style load balance loss: E * sum_e f_e * p_e
+    frac_routed = sel.mean(axis=(0, 1))  # fraction of tokens per expert
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac_routed * mean_prob) / K
+    return y.astype(x.dtype), aux

@@ -1,0 +1,203 @@
+"""Step builders: jit-wired train / prefill / decode steps for a (model, mesh).
+
+``build_*`` return a :class:`StepBundle` holding the jitted function plus the
+in/out shardings and ShapeDtypeStruct trees needed both by the dry-run
+(``.lower(...)`` on structs) and by live execution (device_put real arrays to
+the same shardings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.base import BaseModel
+from repro.runtime.optimizer import Optimizer, OptimizerConfig
+from repro.runtime.sharding import ShardingRules, activation_rules, param_shardings
+
+
+@dataclass
+class StepBundle:
+    fn: Callable  # jitted
+    in_structs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    rules: ShardingRules
+
+    def lower(self):
+        return self.fn.lower(*self.in_structs)
+
+
+def _shard_tree(rules: ShardingRules, axes_tree, struct_tree):
+    return rules.shardings(axes_tree, struct_tree)
+
+
+def make_rules(mesh: Mesh, shape: ShapeConfig, *, zero: bool = True) -> ShardingRules:
+    return ShardingRules.for_shape(
+        mesh, kind=shape.kind, global_batch=shape.global_batch, zero=zero
+    )
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    model: BaseModel,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    opt_cfg: OptimizerConfig | None = None,
+    *,
+    grad_accum: int | None = None,
+    donate: bool = True,
+) -> StepBundle:
+    cfg = model.cfg
+    opt = Optimizer(
+        opt_cfg
+        or OptimizerConfig(
+            name=cfg.optimizer, moment_dtype=cfg.moment_dtype, first_moment=cfg.first_moment
+        )
+    )
+    accum = grad_accum if grad_accum is not None else cfg.grad_accum
+    # grad accumulators in param dtype: bf16 halves the accumulation buffer
+    # for the trillion-param config (noise is amortized over few microbatches)
+    accum_dtype = jnp.dtype(cfg.param_dtype)
+    rules = make_rules(mesh, shape)
+
+    p_shard = param_shardings(model, mesh)
+    p_struct = model.param_struct()
+    o_struct = opt.state_struct(p_struct)
+    o_shard = rules.shardings(opt.state_axes(model.param_axes()), o_struct, is_param=True)
+    b_struct = model.input_specs(shape)
+    b_shard = _shard_tree(rules, model.input_axes(shape), b_struct)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        with activation_rules(rules):
+            if accum <= 1:
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            else:
+                # microbatch scan over the leading batch dim (activation
+                # footprint / accum)
+                def micro(carry, mb):
+                    acc, lsum = carry
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                    acc = jax.tree.map(
+                        lambda a, gg: a + (gg / accum).astype(accum_dtype), acc, g
+                    )
+                    return (acc, lsum + l), None
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+                )
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+                (grads, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0.0)), mbs)
+                loss = lsum / accum
+                metrics = {}
+            new_params, new_opt, stats = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **stats)
+        return new_params, new_opt, metrics
+
+    # metrics are scalars -> replicated
+    out_metrics = jax.eval_shape(train_step, p_struct, o_struct, b_struct)[2]
+    metric_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()), out_metrics)
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metric_shard),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return StepBundle(
+        fn=fn,
+        in_structs=(p_struct, o_struct, b_struct),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metric_shard),
+        rules=rules,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill & decode
+# ---------------------------------------------------------------------------
+
+
+def _serving_zero(model: BaseModel, mesh: Mesh) -> bool:
+    """Serving shards weights over the batch axes too when the model-axis
+    shard alone would not fit HBM (the 1T config); small models keep weights
+    replicated across data shards to avoid per-layer gathers."""
+    from repro.utils.tree import tree_bytes
+
+    per_chip = tree_bytes(model.param_struct()) / mesh.shape.get("model", 1)
+    return per_chip > 8e9
+
+
+def build_prefill_step(model: BaseModel, mesh: Mesh, shape: ShapeConfig) -> StepBundle:
+    zero = _serving_zero(model, mesh)
+    rules = make_rules(mesh, shape, zero=zero)
+    p_shard = param_shardings(model, mesh, zero=zero)
+    p_struct = model.param_struct()
+    b_struct = model.input_specs(shape)
+    b_shard = _shard_tree(rules, model.input_axes(shape), b_struct)
+
+    def prefill(params, batch):
+        with activation_rules(rules):
+            logits, cache = model.prefill(params, batch)
+        return logits, cache
+
+    out_struct = jax.eval_shape(prefill, p_struct, b_struct)
+    logits_shard = NamedSharding(mesh, rules.spec(("batch", None, None), out_struct[0].shape))
+    # prefill cache has the same tree as cache_struct (sequence = prompt len)
+    cache_shard = rules.shardings(model.cache_axes(shape), out_struct[1])
+    fn = jax.jit(
+        prefill,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(logits_shard, cache_shard),
+    )
+    return StepBundle(fn, (p_struct, b_struct), (p_shard, b_shard), (logits_shard, cache_shard), rules)
+
+
+def build_decode_step(model: BaseModel, mesh: Mesh, shape: ShapeConfig, *, donate: bool = True) -> StepBundle:
+    zero = _serving_zero(model, mesh)
+    rules = make_rules(mesh, shape, zero=zero)
+    p_shard = param_shardings(model, mesh, zero=zero)
+    p_struct = model.param_struct()
+    c_struct = model.cache_struct(shape)
+    c_shard = rules.shardings(model.cache_axes(shape), c_struct)
+    b_struct = model.input_specs(shape)
+    b_shard = _shard_tree(rules, model.input_axes(shape), b_struct)
+
+    def decode(params, cache, batch):
+        with activation_rules(rules):
+            logits, cache = model.decode(params, cache, batch)
+        return logits, cache
+
+    out_struct = jax.eval_shape(decode, p_struct, c_struct, b_struct)
+    logits_shard = NamedSharding(mesh, rules.spec(("batch", None, None), out_struct[0].shape))
+    fn = jax.jit(
+        decode,
+        in_shardings=(p_shard, c_shard, b_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,) if donate else (),
+    )
+    return StepBundle(
+        fn, (p_struct, c_struct, b_struct), (p_shard, c_shard, b_shard), (logits_shard, c_shard), rules
+    )
+
+
+def build_step(model: BaseModel, mesh: Mesh, shape: ShapeConfig, **kw) -> StepBundle:
+    """Dispatch on the shape kind (train_step vs serve_step)."""
+    if shape.kind == "train":
+        return build_train_step(model, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, mesh, shape)
+    return build_decode_step(model, mesh, shape)

@@ -1,0 +1,15 @@
+from repro.streaming.rate_control import PIDRateController
+from repro.streaming.windows import (
+    SessionWindow,
+    SlidingWindow,
+    TumblingWindow,
+    WatermarkTracker,
+)
+
+__all__ = [
+    "PIDRateController",
+    "SessionWindow",
+    "SlidingWindow",
+    "TumblingWindow",
+    "WatermarkTracker",
+]

@@ -1,0 +1,77 @@
+"""Window assigners + watermarks (paper §3.1: fixed/sliding/session windows,
+processing-time or event-time)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Iterable
+
+#: a window is the half-open interval [start, end)
+Window = tuple[float, float]
+
+
+@dataclass(frozen=True)
+class TumblingWindow:
+    size: float
+
+    def assign(self, ts: float) -> list[Window]:
+        start = math.floor(ts / self.size) * self.size
+        return [(start, start + self.size)]
+
+
+@dataclass(frozen=True)
+class SlidingWindow:
+    size: float
+    slide: float
+
+    def assign(self, ts: float) -> list[Window]:
+        out = []
+        first = math.floor((ts - self.size) / self.slide) * self.slide + self.slide
+        start = first
+        while start <= ts:
+            out.append((start, start + self.size))
+            start += self.slide
+        return [w for w in out if w[0] <= ts < w[1]]
+
+
+@dataclass
+class SessionWindow:
+    """Gap-based session windows; assignment is stateful per key."""
+
+    gap: float
+    _sessions: dict = field(default_factory=dict)  # key -> (start, end)
+
+    def assign(self, ts: float, key=None) -> list[Window]:
+        cur = self._sessions.get(key)
+        if cur is not None and ts < cur[1]:
+            merged = (min(cur[0], ts), max(cur[1], ts + self.gap))
+        else:
+            merged = (ts, ts + self.gap)
+        self._sessions[key] = merged
+        return [merged]
+
+    def close_before(self, watermark: float, key=None) -> list[Window]:
+        closed = []
+        for k, (s, e) in list(self._sessions.items()):
+            if (key is None or k == key) and e <= watermark:
+                closed.append((s, e))
+                del self._sessions[k]
+        return closed
+
+
+class WatermarkTracker:
+    """Event-time watermark: max observed timestamp minus allowed lateness."""
+
+    def __init__(self, allowed_lateness: float = 0.0):
+        self.allowed_lateness = allowed_lateness
+        self._max_ts = -math.inf
+
+    def observe(self, ts: float) -> None:
+        self._max_ts = max(self._max_ts, ts)
+
+    @property
+    def watermark(self) -> float:
+        return self._max_ts - self.allowed_lateness
+
+    def is_late(self, ts: float) -> bool:
+        return ts < self.watermark

@@ -1,0 +1,17 @@
+"""Small shared utilities: pytrees, timing, deterministic RNG streams."""
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_flatten_with_paths,
+    tree_zeros_like,
+)
+from repro.utils.timer import Timer, now_monotonic
+
+__all__ = [
+    "Timer",
+    "now_monotonic",
+    "tree_bytes",
+    "tree_count",
+    "tree_flatten_with_paths",
+    "tree_zeros_like",
+]

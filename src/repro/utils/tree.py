@@ -1,0 +1,44 @@
+"""Pytree helpers used across the runtime, checkpointing and tests."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree into ``[("a/b/0", leaf), ...]`` with stable paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                parts.append(str(p.name))
+            else:  # pragma: no cover - defensive
+                parts.append(str(p))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def tree_count(tree: Any) -> int:
+    """Total number of array elements in the tree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total number of bytes in the tree (works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)

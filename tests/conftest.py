@@ -1,0 +1,33 @@
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: float = 600) -> str:
+    """Run a snippet in a subprocess with N forced host devices.
+
+    Device count must be fixed before jax initializes, so multi-device tests
+    cannot run in the main pytest process (which sees 1 CPU device).
+    """
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n_devices}'\n"
+        + textwrap.dedent(code)
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd=__import__("os").path.dirname(__import__("os").path.dirname(__file__)),
+    )
+    assert res.returncode == 0, f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    return res.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_with_devices

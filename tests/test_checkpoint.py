@@ -1,0 +1,71 @@
+"""Checkpoint manager: roundtrips, atomicity, retention, async, offsets."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b16": jnp.ones((5,), jnp.bfloat16) * 1.5},
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state()
+    mgr.save(3, state, meta={"offsets": {"0": 42}})
+    restored, meta = mgr.restore(state)
+    assert meta["offsets"] == {"0": 42}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_keep_last_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in range(5):
+        mgr.save(s, _state())
+    assert mgr.steps() == [3, 4]
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=10)
+    s = _state()
+    for step in (1, 2):
+        s2 = jax.tree.map(lambda x: x * step if x.dtype != jnp.int32 else x, s)
+        mgr.save(step, s2)
+    r1, _ = mgr.restore(s, step=1)
+    r2, _ = mgr.restore(s, step=2)
+    np.testing.assert_array_equal(np.asarray(r2["params"]["w"]), 2 * np.asarray(r1["params"]["w"]))
+
+
+def test_async_save_waits(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(1, _state())
+    mgr.wait()
+    assert mgr.latest_step() == 1
+    restored, _ = mgr.restore(_state())
+    assert restored["opt"]["step"] == 7
+
+
+def test_tmp_dirs_invisible(tmp_path):
+    """A crash mid-write must not surface a partial checkpoint."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_0000000009.tmp"))
+    assert mgr.steps() == []
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_state())
+
+
+def test_missing_leaf_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        mgr.restore({"a": jnp.zeros(3), "b": jnp.zeros(2)})

@@ -1,0 +1,124 @@
+"""Cross-pod gradient compression: math, HLO wire format, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.grad_compress import (
+    compression_wire_bytes,
+    dequantize_int8,
+    quantize_int8,
+)
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.key(0), (2048,)) * 10
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s, x.shape)
+    blockmax = jnp.max(jnp.abs(x.reshape(-1, 256)), axis=1)
+    rel = jnp.abs(deq - x).reshape(-1, 256).max(axis=1) / jnp.maximum(blockmax, 1e-30)
+    assert q.dtype == jnp.int8
+    assert float(rel.max()) <= 1 / 250
+
+
+def test_error_feedback_unbiased_over_time():
+    true_sum = jnp.zeros(512)
+    qsum = jnp.zeros(512)
+    resid = jnp.zeros(512)
+    for i in range(100):
+        g = jax.random.normal(jax.random.key(i), (512,)) * 0.01
+        true_sum = true_sum + g
+        corrected = g + resid
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s, g.shape)
+        resid = corrected - deq
+        qsum = qsum + deq
+    # drift stays bounded by a single-step quantization error (not O(steps))
+    assert float(jnp.abs(qsum - true_sum).max()) < 5e-4
+
+
+def test_wire_format_compression_ratio():
+    comp, full = compression_wire_bytes(1_000_000)
+    assert 3.5 < full / comp < 4.0
+
+
+def test_compressed_pod_reduction_lowers_with_s8_collectives(subproc):
+    subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.runtime.grad_compress import quantized_psum, resid_len
+
+mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+
+def step(g, r):
+    # per-pod partials enter with a leading pod dim; exchange inside shard_map
+    def local(g, r):
+        red, nr = quantized_psum(g[0], r[0], "pod")
+        return red[None], nr[None]
+    return jax.shard_map(local, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                         out_specs=(P(None), P("pod")), check_vma=False)(g, r)
+
+g = jnp.stack([jnp.ones((4, 256)) * 0.5, jnp.ones((4, 256)) * 0.25])
+r = jnp.zeros((2, resid_len(1024)))
+with mesh:
+    compiled = jax.jit(step).lower(
+        jax.ShapeDtypeStruct(g.shape, g.dtype), jax.ShapeDtypeStruct(r.shape, r.dtype)
+    ).compile()
+txt = compiled.as_text()
+assert "s8[" in txt and "all-gather" in txt, "int8 payload missing from wire"
+with mesh:
+    red, new_r = jax.jit(step)(g, r)
+np.testing.assert_allclose(np.asarray(red[0]), 0.75, atol=0.02)  # 0.5 + 0.25
+print("S8 WIRE OK")
+""",
+        n_devices=8,
+    )
+
+
+def test_compressed_dp_training_converges(subproc):
+    """Pure data-parallel across 2 'pods': compressed grad exchange reaches
+    the same loss as exact f32 within tolerance."""
+    subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+key = jax.random.key(0)
+Xw = jax.random.normal(key, (64, 16))
+y = Xw @ jax.random.normal(jax.random.key(1), (16,))
+
+def loss_fn(w, X, y):
+    return jnp.mean((X @ w - y) ** 2)
+
+from repro.runtime.grad_compress import quantized_psum, resid_len
+
+def make_step(compressed):
+    def step(w, resid, X, y):
+        def per_pod(X, y, r):
+            g = jax.grad(loss_fn)(w, X, y) / 2  # local half-batch grad
+            if compressed:
+                red, nr = quantized_psum(g, r[0], "pod")
+                return red, nr[None]
+            return jax.lax.psum(g, "pod"), r
+        g, resid = jax.shard_map(per_pod, mesh=mesh,
+                                 in_specs=(P("pod"), P("pod"), P("pod")),
+                                 out_specs=(P(None), P("pod")), check_vma=False)(X, y, resid)
+        return w - 0.05 * g, resid
+    return jax.jit(step)
+
+for compressed in (False, True):
+    w = jnp.zeros((16,))
+    resid = jnp.zeros((2, resid_len(16)))
+    step = make_step(compressed)
+    with mesh:
+        for i in range(300):
+            w, resid = step(w, resid, Xw, y)
+    final = float(loss_fn(w, Xw, y))
+    print("compressed" if compressed else "exact", final)
+    assert final < 1e-3, final
+print("CONVERGES OK")
+""",
+        n_devices=8,
+    )

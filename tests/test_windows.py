@@ -1,0 +1,61 @@
+"""Window-assigner + watermark properties (hypothesis)."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.streaming import SessionWindow, SlidingWindow, TumblingWindow, WatermarkTracker
+
+ts_strategy = st.floats(min_value=0.0, max_value=1e6, allow_nan=False, allow_infinity=False)
+
+
+@given(ts_strategy, st.floats(0.1, 100.0))
+@settings(max_examples=100, deadline=None)
+def test_tumbling_contains_and_partitions(ts, size):
+    (w,) = TumblingWindow(size).assign(ts)
+    assert w[0] <= ts < w[1]
+    assert math.isclose(w[1] - w[0], size)
+    # window starts are aligned to the size grid
+    assert math.isclose(w[0] % size, 0.0, abs_tol=1e-6) or math.isclose(w[0] % size, size, abs_tol=1e-6)
+
+
+@given(ts_strategy, st.floats(1.0, 50.0), st.integers(1, 4))
+@settings(max_examples=100, deadline=None)
+def test_sliding_every_window_contains_ts(ts, slide, mult):
+    size = slide * mult
+    ws = SlidingWindow(size, slide).assign(ts)
+    assert len(ws) >= 1
+    for w in ws:
+        assert w[0] <= ts < w[1]
+        assert math.isclose(w[1] - w[0], size, rel_tol=1e-9)
+    # a timestamp belongs to ~size/slide sliding windows
+    assert len(ws) <= mult + 1
+
+
+def test_session_windows_merge_within_gap():
+    s = SessionWindow(gap=10.0)
+    s.assign(0.0, key="k")
+    (w,) = s.assign(5.0, key="k")  # within gap -> merged
+    assert w[0] == 0.0 and w[1] == 15.0
+    (w2,) = s.assign(100.0, key="k")  # new session
+    assert w2[0] == 100.0
+    closed = s.close_before(90.0, key="k")
+    assert closed == []  # active session replaced the old one
+
+
+def test_watermark_lateness():
+    t = WatermarkTracker(allowed_lateness=5.0)
+    t.observe(100.0)
+    assert t.watermark == 95.0
+    assert t.is_late(94.0)
+    assert not t.is_late(96.0)
+
+
+@given(st.lists(ts_strategy, min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_watermark_monotonic(times):
+    t = WatermarkTracker()
+    prev = -math.inf
+    for ts in times:
+        t.observe(ts)
+        assert t.watermark >= prev
+        prev = t.watermark
