@@ -1,0 +1,137 @@
+"""Fig. 8 analog: dynamic resourcing under a producer rate step.
+
+A MASS source doubles its rate mid-run; the ElasticController grows the
+processing pilot with an extension pilot, lag drains, the rate drops, and
+the controller shrinks back. Emits the full timeline (lag, devices,
+throughput vs. time) as JSON next to this file and returns summary rows
+for ``benchmarks/run.py``:
+
+* scale-up reaction time (high-water crossing -> extension pilot running)
+* lag recovery time (extension running -> lag back under high water)
+* peak lag and device trajectory
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import PilotComputeService
+from repro.elastic import (
+    ElasticConfig,
+    ElasticController,
+    MetricsBus,
+    ThresholdHysteresisPolicy,
+    timeline,
+)
+from repro.miniapps import RateStepScenario, SourceConfig, StreamSource
+
+TIMELINE_PATH = os.path.join(os.path.dirname(__file__), "elasticity_timeline.json")
+
+HIGH_LAG, LOW_LAG = 80.0, 15.0
+BASE_DEVICES, STEP_DEVICES = 2, 2
+PER_MSG = 0.01  # seconds of processing per message per device
+
+
+class _PointSource(StreamSource):
+    def make_message(self, rng, i):
+        return rng.normal(size=(8,))
+
+
+def _scenario(duration_scale: float = 1.0):
+    svc = PilotComputeService(devices=list(range(8)))
+    bus = MetricsBus()
+    kafka = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"})
+    cluster = kafka.get_context()
+    cluster.create_topic("elastic_bench", 4)
+    engine = svc.submit_pilot(
+        {"number_of_nodes": 1, "cores_per_node": BASE_DEVICES, "type": "spark"})
+    ctx = engine.get_context()
+    capacity = {"n": BASE_DEVICES}
+
+    def process(state, msgs):
+        # device-proportional cost: the data-parallel resharding contract
+        time.sleep(len(msgs) * PER_MSG / max(capacity["n"], 1))
+        return (state or 0) + len(msgs)
+
+    stream = ctx.stream(cluster, "elastic_bench", group="g", process_fn=process,
+                        batch_interval=0.05, max_batch_records=32,
+                        backpressure=False, metrics=bus)
+
+    def on_rescale(devices):
+        capacity["n"] = max(len(devices), 1)
+        return stream.state
+
+    stream.on_rescale = on_rescale
+
+    src = _PointSource(cluster, SourceConfig("elastic_bench", rate_msgs_per_s=60))
+    ctl = ElasticController(
+        svc, engine, bus,
+        ThresholdHysteresisPolicy(high_lag=HIGH_LAG, low_lag=LOW_LAG,
+                                  up_stable=2, down_stable=3),
+        config=ElasticConfig(interval=0.1, min_devices=BASE_DEVICES, max_devices=6,
+                             devices_per_step=STEP_DEVICES, cooldown=1.2),
+        lag_probe=lambda: sum(stream.lag().values()),
+    )
+    steps = [(1.0 * duration_scale, 60), (5.0 * duration_scale, 300),
+             (5.0 * duration_scale, 40)]
+    scenario = RateStepScenario(src, steps)
+    stream.start()
+    src.start()
+    ctl.start()
+    t0 = time.monotonic()
+    scenario.start()
+    try:
+        deadline = t0 + sum(d for d, _ in steps) + 15.0
+        while time.monotonic() < deadline:
+            if scenario.finished and ctl.devices == BASE_DEVICES:
+                break
+            time.sleep(0.1)
+    finally:
+        scenario.stop()
+        src.stop()
+        ctl.shutdown()
+        stream.stop()
+        svc.cancel()
+    return bus, ctl, scenario, t0
+
+
+def run(duration_scale: float = 1.0):
+    bus, ctl, scenario, t0 = _scenario(duration_scale)
+
+    tl = timeline(bus, ctl.events, t0=t0)
+    tl["rate_steps"] = [[round(t - t0, 4), r] for t, r in scenario.transitions]
+    with open(TIMELINE_PATH, "w") as f:
+        json.dump(tl, f, indent=1)
+
+    lag_series = bus.series("elastic.lag")
+    rows = [("elasticity_timeline", 0.0, f"json={os.path.basename(TIMELINE_PATH)};"
+             f"points={sum(len(v) for v in tl['series'].values())}")]
+    ups = ctl.events.of("scale_up")
+    downs = ctl.events.of("scale_down")
+    if ups:
+        up = ups[0]
+        crossings = [t for t, v in lag_series if v > HIGH_LAG and t <= up.t]
+        react = up.t - crossings[0] if crossings else float("nan")
+        rows.append(("elasticity_scale_up_reaction", react * 1e6,
+                     f"devices={up.devices_before}->{up.devices_after}"))
+        recovered = [t for t, v in lag_series if t > up.t and v < HIGH_LAG]
+        if recovered:
+            rows.append(("elasticity_lag_recovery", (recovered[0] - up.t) * 1e6,
+                         f"high_water={HIGH_LAG:.0f}"))
+    if downs:
+        rows.append(("elasticity_scale_down", (downs[0].t - t0) * 1e6,
+                     f"devices={downs[0].devices_before}->{downs[0].devices_after}"))
+    peak = max((v for _, v in lag_series), default=0.0)
+    devs = [v for _, v in bus.series("elastic.devices")]
+    rows.append(("elasticity_peak_lag", 0.0,
+                 f"records={peak:.0f};devices_max={max(devs, default=0):.0f};"
+                 f"devices_final={devs[-1] if devs else 0:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -13,7 +13,8 @@ import os
 import sys
 import traceback
 
-SUITES = ("startup", "latency", "producer_throughput", "processing_throughput", "kernel_bench")
+SUITES = ("startup", "latency", "producer_throughput", "processing_throughput",
+          "elasticity", "kernel_bench")
 
 
 def _roofline_rows() -> list[tuple[str, float, str]]:

@@ -15,7 +15,7 @@ from dataclasses import dataclass
 from typing import Any, Callable
 
 from repro.broker.cluster import BrokerCluster
-from repro.broker.records import Record, decode_array, decode_msg
+from repro.broker.records import Record, decode_array, decode_compressed, decode_msg
 
 
 @dataclass
@@ -27,15 +27,17 @@ class Message:
 
 
 def _deserialize(data: bytes) -> Any:
+    """Explicit dispatch on the serde tag byte (records.py): ``N`` = npy,
+    ``M`` = msgpack, ``Z`` = zstd-compressed either (the payload is sniffed
+    after decompression). Unknown tags pass through as raw bytes; decode
+    errors propagate instead of being masked by a cross-format fallback."""
     tag = data[:1]
-    if tag in (b"N",) or (tag == b"Z" and True):
-        # npy and zstd-npy share decode_array; msgpack payloads start with M
-        try:
-            return decode_array(data)
-        except Exception:
-            return decode_msg(data)
+    if tag == b"N":
+        return decode_array(data)
     if tag == b"M":
         return decode_msg(data)
+    if tag == b"Z":
+        return decode_compressed(data)
     return data
 
 
@@ -93,11 +95,15 @@ class Consumer:
         *,
         deserialize: bool = True,
         from_committed: bool = True,
+        metrics: Any | None = None,
     ):
         self.cluster = cluster
         self.group = group
         self.member_id = member_id
         self.deserialize = deserialize
+        #: duck-typed MetricsBus (repro.elastic.metrics): consumption
+        #: counters are published per non-empty poll when set
+        self.metrics = metrics
         group.join(member_id)
         self._positions: dict[int, int] = {}
         self._generation = -1
@@ -149,6 +155,11 @@ class Consumer:
                 break
             time.sleep(0.002)
         self.consumed_records += len(out)
+        if out and self.metrics is not None:
+            self.metrics.publish("consumer.records", self.consumed_records,
+                                 member=self.member_id)
+            self.metrics.publish("consumer.bytes", self.consumed_bytes,
+                                 member=self.member_id)
         return out
 
     def positions(self) -> dict[int, int]:

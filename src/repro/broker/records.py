@@ -70,3 +70,17 @@ def decode_msg(data: bytes) -> Any:
     if tag == b"Z":
         body = _ZSTD_D.decompress(body)
     return msgpack.unpackb(body, raw=False)
+
+
+_NPY_MAGIC = b"\x93NUMPY"
+
+
+def decode_compressed(data: bytes) -> Any:
+    """Decode a ``Z``-tagged payload; both serializers compress to the same
+    tag, so the inner format is sniffed via the npy magic prefix."""
+    if _ZSTD_D is None:
+        raise RuntimeError("zstandard not available to decode compressed payload")
+    body = _ZSTD_D.decompress(data[1:])
+    if body[: len(_NPY_MAGIC)] == _NPY_MAGIC:
+        return np.load(io.BytesIO(body), allow_pickle=False)
+    return msgpack.unpackb(body, raw=False)

@@ -40,6 +40,7 @@ class DevicePool:
     def __init__(self, devices: list | None = None, n_host_slots: int = 1 << 16):
         self._devices = list(devices if devices is not None else jax.devices())
         self._free = list(self._devices)
+        self._leased: set = set()  # membership in O(1); guards double-release
         self._host_slots = iter(itertools.count())
         self._lease_ids = iter(itertools.count(1))
         self._lock = threading.Lock()
@@ -53,19 +54,38 @@ class DevicePool:
         with self._lock:
             return len(self._free)
 
+    @property
+    def leased_devices(self) -> int:
+        with self._lock:
+            return len(self._leased)
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of the pool currently leased (the autoscaler's headroom
+        signal)."""
+        with self._lock:
+            return len(self._leased) / len(self._devices) if self._devices else 0.0
+
     def acquire(self, n_devices: int, n_nodes: int) -> Lease:
         with self._lock:
             if n_devices > len(self._free):
                 raise RuntimeError(
                     f"requested {n_devices} devices, only {len(self._free)} free"
                 )
-            devs = [self._free.pop(0) for _ in range(n_devices)]
+            devs = self._free[:n_devices]
+            del self._free[:n_devices]
+            self._leased.update(devs)
             nodes = [next(self._host_slots) for _ in range(n_nodes)]
             return Lease(next(self._lease_ids), devs, nodes)
 
     def release(self, lease: Lease) -> None:
+        """Idempotent: devices not currently leased (double release) are
+        ignored rather than duplicated into the free list."""
         with self._lock:
-            self._free.extend(d for d in lease.devices if d not in self._free)
+            for d in lease.devices:
+                if d in self._leased:
+                    self._leased.remove(d)
+                    self._free.append(d)
             lease.devices = []
             lease.nodes = []
 
@@ -129,13 +149,30 @@ class Pilot:
 class PilotComputeService:
     """Entry point (paper Listing 2): ``PilotComputeService().submit_pilot(pcd)``."""
 
-    def __init__(self, devices: list | None = None, *, provision_delay_per_node: float = 0.0):
+    def __init__(self, devices: list | None = None, *, provision_delay_per_node: float = 0.0,
+                 metrics: Any | None = None):
         self.pool = DevicePool(devices)
         self.pilots: list[Pilot] = []
         self.monitor = HeartbeatMonitor()
         #: emulates the scheduler/bootstrap latency of real clusters (Fig. 6)
         self.provision_delay_per_node = provision_delay_per_node
+        #: duck-typed MetricsBus (repro.elastic.metrics); pool gauges are
+        #: published on every lease change when set
+        self.metrics = metrics
         self._lock = threading.Lock()
+
+    def pool_stats(self) -> dict:
+        return {
+            "devices_total": self.pool.total_devices,
+            "devices_leased": self.pool.leased_devices,
+            "devices_free": self.pool.free_devices,
+            "utilization": self.pool.utilization,
+        }
+
+    def _publish_pool(self) -> None:
+        if self.metrics is not None:
+            for k, v in self.pool_stats().items():
+                self.metrics.publish(f"pool.{k}", v)
 
     def submit_pilot(self, pcd: PilotComputeDescription | dict) -> Pilot:
         if isinstance(pcd, dict):
@@ -163,6 +200,7 @@ class PilotComputeService:
         with self._lock:
             self.pilots.append(pilot)
         self.monitor.watch(pilot)
+        self._publish_pool()
         return pilot.wait()
 
     def _provision_delay(self, pcd: PilotComputeDescription) -> None:
@@ -175,6 +213,7 @@ class PilotComputeService:
         with self._lock:
             if pilot in self.pilots:
                 self.pilots.remove(pilot)
+        self._publish_pool()
 
     # -- fault injection / recovery (tests + FT benchmarks) --------------------
 

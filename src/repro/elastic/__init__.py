@@ -1,0 +1,47 @@
+"""Elastic autoscaling control plane (paper §4.2 "dynamically respond to
+resource requirements by adding/removing resources at runtime").
+
+bus (``MetricsBus``) -> policy (``ScalingPolicy``) -> reconciler
+(``ElasticController``) -> pilots (``submit_pilot(parent=...)`` / ``cancel``).
+See docs/elastic.md for the architecture and a quickstart.
+"""
+from repro.elastic.controller import ElasticConfig, ElasticController
+from repro.elastic.events import EventLog, ScalingEvent, timeline
+from repro.elastic.metrics import (
+    BatchMetrics,
+    ContinuousStats,
+    MetricsBus,
+    MetricsSnapshot,
+    Sample,
+    StreamStats,
+)
+from repro.elastic.policy import (
+    HOLD,
+    BinPackingPolicy,
+    PIDScalingPolicy,
+    ScalingDecision,
+    ScalingPolicy,
+    ThresholdHysteresisPolicy,
+    first_fit_decreasing,
+)
+
+__all__ = [
+    "BatchMetrics",
+    "BinPackingPolicy",
+    "ContinuousStats",
+    "ElasticConfig",
+    "ElasticController",
+    "EventLog",
+    "HOLD",
+    "MetricsBus",
+    "MetricsSnapshot",
+    "PIDScalingPolicy",
+    "Sample",
+    "ScalingDecision",
+    "ScalingEvent",
+    "ScalingPolicy",
+    "StreamStats",
+    "ThresholdHysteresisPolicy",
+    "first_fit_decreasing",
+    "timeline",
+]

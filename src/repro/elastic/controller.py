@@ -1,0 +1,211 @@
+"""ElasticController — the reconciler that closes the paper's loop.
+
+Watches the :class:`MetricsBus`, asks a :class:`ScalingPolicy` for a device
+delta, and actuates it through the existing pilot machinery: growth is
+``PilotComputeService.submit_pilot(parent=base)`` (paper Listing 4 — an
+extension pilot whose lease the plugin folds in, firing the stream's
+``on_rescale`` re-sharding hook), shrink is ``Pilot.cancel()`` on the most
+recent extension. The controller owns only the extensions it created; the
+base pilot is never cancelled.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core.description import PilotComputeDescription
+from repro.elastic.events import EventLog, ScalingEvent
+from repro.elastic.metrics import MetricsBus, MetricsSnapshot
+from repro.elastic.policy import HOLD, ScalingDecision, ScalingPolicy
+
+
+@dataclass
+class ElasticConfig:
+    interval: float = 0.5  # seconds between reconcile passes
+    min_devices: int = 1  # never shrink the pipeline below this
+    max_devices: int | None = None  # None = whatever the pool can give
+    devices_per_step: int = 1  # lease size of one extension pilot
+    cooldown: float = 1.0  # seconds between scaling actions
+
+
+class ElasticController:
+    """Reconcile loop: probe -> snapshot -> decide -> grow/shrink.
+
+    Use ``start()/stop()`` for the background thread, or call ``step()``
+    directly for deterministic (test) driving.
+    """
+
+    def __init__(
+        self,
+        service,
+        pilot,
+        bus: MetricsBus,
+        policy: ScalingPolicy,
+        *,
+        config: ElasticConfig | None = None,
+        lag_probe: Callable[[], float] | None = None,
+        probes: dict[str, Callable[[], float]] | None = None,
+    ):
+        self.service = service
+        self.pilot = pilot  # base pilot; extensions hang off it
+        self.bus = bus
+        self.policy = policy
+        self.config = config or ElasticConfig()
+        #: published to ``elastic.lag`` each pass — authoritative when the
+        #: engine is too stalled to publish its own ``stream.lag``
+        self.lag_probe = lag_probe
+        self.probes = dict(probes or {})
+        self.events = EventLog()
+        self.extensions: list = []  # pilots we created, newest last
+        self._last_action_t = -float("inf")
+        self._ticks = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._last_error: BaseException | None = None
+        # reentrant: _shrink reads the devices property while holding it
+        self._lock = threading.RLock()
+
+    # -- observed state -------------------------------------------------------
+
+    @property
+    def devices(self) -> int:
+        """Devices currently serving the pipeline (base + live extensions)."""
+        with self._lock:
+            return len(self.pilot.lease.devices) + sum(
+                len(p.lease.devices) for p in self.extensions
+            )
+
+    @property
+    def ticks(self) -> int:
+        return self._ticks
+
+    # -- one reconcile pass ---------------------------------------------------
+
+    def step(self) -> ScalingDecision:
+        now = time.monotonic()
+        self._ticks += 1
+        if self.lag_probe is not None:
+            self.bus.publish("elastic.lag", self.lag_probe(), t=now)
+        for name, fn in self.probes.items():
+            self.bus.publish(name, fn(), t=now)
+        snap = MetricsSnapshot.capture(self.bus, self.service.pool,
+                                       pipeline_devices=self.devices)
+        # gate on cooldown BEFORE consulting the policy: a decision dropped
+        # here would consume its hysteresis counters / integral for nothing,
+        # adding up_stable*interval of latency after every cooldown collision
+        if now - self._last_action_t < self.config.cooldown:
+            applied = HOLD
+        else:
+            applied = self._apply(self.policy.decide(snap), snap, now)
+        self.bus.publish("elastic.devices", self.devices, t=now)
+        self.bus.publish("elastic.decision", applied.delta_devices, t=now)
+        return applied
+
+    def _apply(self, decision: ScalingDecision, snap: MetricsSnapshot, now: float) -> ScalingDecision:
+        if decision.delta_devices == 0:
+            return decision
+        before = self.devices
+        # relative deltas count lease-sized actions; absolute deltas are
+        # exact device counts, rounded up on grow but DOWN on shrink so a
+        # target between lease multiples holds rather than flapping
+        step = max(self.config.devices_per_step, 1)
+        n = abs(decision.delta_devices)
+        if decision.absolute:
+            want = (-(-n // step) if decision.scale_up else n // step) * step
+        else:
+            want = n * step
+        if want <= 0:
+            return HOLD
+        if decision.scale_up:
+            want = min(want, self.service.pool.free_devices)
+            if self.config.max_devices is not None:
+                want = min(want, self.config.max_devices - before)
+            if want <= 0:
+                self.events.record(ScalingEvent(now, "rejected", 0, before, before,
+                                                f"no headroom ({decision.reason})"))
+                return HOLD
+            self._grow(want)
+            action = "scale_up"
+        else:
+            removed = self._shrink(want)
+            if removed == 0:
+                return HOLD
+            action = "scale_down"
+        self._last_action_t = now
+        after = self.devices
+        event = ScalingEvent(now, action, after - before, before, after, decision.reason)
+        self.events.record(event)
+        self.bus.publish("elastic.event", 1.0 if action == "scale_up" else -1.0, t=now)
+        return ScalingDecision(after - before, decision.reason)
+
+    def _grow(self, n_devices: int) -> None:
+        pcd = PilotComputeDescription(
+            number_of_nodes=1,
+            cores_per_node=n_devices,
+            framework=self.pilot.pcd.framework,
+            parent=self.pilot,
+        )
+        ext = self.service.submit_pilot(pcd)
+        with self._lock:
+            self.extensions.append(ext)
+
+    def _shrink(self, n_devices: int) -> int:
+        """Cancel newest-first extensions until ~n_devices are returned,
+        honoring ``min_devices``. The base pilot is never touched."""
+        removed = 0
+        while removed < n_devices:
+            with self._lock:
+                if not self.extensions:
+                    break
+                candidate = self.extensions[-1]
+                size = len(candidate.lease.devices)
+                if size == 0:  # already drained elsewhere: just drop it
+                    self.extensions.pop()
+                    continue
+                if self.devices - size < self.config.min_devices:
+                    break
+                self.extensions.pop()
+            # once popped, the shrink must be accounted for even if the
+            # cancel hits a churn race — lease release is idempotent
+            try:
+                candidate.cancel()
+            except Exception:
+                self.bus.publish("elastic.errors", 1.0)
+                self.service._release(candidate)
+            removed += size
+        return removed
+
+    # -- background loop ------------------------------------------------------
+
+    def start(self) -> "ElasticController":
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.config.interval):
+            try:
+                self.step()
+            except Exception as e:  # pilot churn races are survivable
+                self.bus.publish("elastic.errors", 1.0)
+                self._last_error = e
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def shutdown(self, *, release_extensions: bool = True) -> None:
+        self.stop()
+        if release_extensions:
+            with self._lock:
+                exts, self.extensions = list(self.extensions), []
+            for p in reversed(exts):
+                try:
+                    p.cancel()
+                except Exception:
+                    pass

@@ -1,0 +1,232 @@
+"""MetricsBus — the shared telemetry sink of the elastic control plane.
+
+Everything that used to live in per-engine silos (``StreamStats`` /
+``BatchMetrics`` in the micro-batch engine, ``ContinuousStats`` in the
+continuous engine) now has one home: engines, consumers and the broker
+publish named samples here, and the :class:`ElasticController` /
+``ScalingPolicy`` read a coherent :class:`MetricsSnapshot` back out.
+
+Conventions (all optional — the bus is schemaless):
+
+* ``stream.lag``             gauge, per-stream label — broker records behind
+* ``stream.records``         counter, per-stream — total records processed
+* ``stream.records_per_sec`` gauge, per-stream — last-batch throughput
+* ``stream.processing_delay``/``stream.scheduling_delay`` gauges (seconds)
+* ``stream.busy_frac``       gauge — processing_delay / batch_interval
+* ``pool.devices_total``/``pool.devices_leased``/``pool.utilization`` gauges
+* ``elastic.devices``/``elastic.lag``/``elastic.decision`` — controller
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable
+
+
+@dataclass(frozen=True)
+class Sample:
+    name: str
+    value: float
+    t: float
+    labels: tuple = ()  # sorted ((key, value), ...) pairs
+
+    def label(self, key: str, default: str | None = None) -> str | None:
+        for k, v in self.labels:
+            if k == key:
+                return v
+        return default
+
+
+class MetricsBus:
+    """Thread-safe pub/sub metrics sink with bounded history.
+
+    ``publish`` is cheap (deque append + dict put under one lock) so hot
+    paths — the micro-batch loop, consumer polls — can call it per batch.
+    """
+
+    def __init__(self, max_history: int = 16384):
+        self._lock = threading.Lock()
+        self._history: deque[Sample] = deque(maxlen=max_history)
+        self._latest: dict[tuple[str, tuple], Sample] = {}
+        self._subscribers: list[Callable[[Sample], None]] = []
+
+    # -- write side ----------------------------------------------------------
+
+    def publish(self, name: str, value: float, *, t: float | None = None, **labels: str) -> Sample:
+        s = Sample(name, float(value), time.monotonic() if t is None else t,
+                   tuple(sorted(labels.items())))
+        with self._lock:
+            self._history.append(s)
+            self._latest[(s.name, s.labels)] = s
+            subs = list(self._subscribers)
+        for fn in subs:  # outside the lock: subscribers may publish back
+            try:
+                fn(s)
+            except Exception:
+                pass  # a broken observer must never take down the data plane
+        return s
+
+    def subscribe(self, fn: Callable[[Sample], None]) -> Callable[[], None]:
+        with self._lock:
+            self._subscribers.append(fn)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                if fn in self._subscribers:
+                    self._subscribers.remove(fn)
+
+        return unsubscribe
+
+    # -- read side -----------------------------------------------------------
+
+    def latest(self, name: str, **labels: str) -> Sample | None:
+        key = (name, tuple(sorted(labels.items())))
+        with self._lock:
+            if labels or key in self._latest:
+                return self._latest.get(key)
+            # no labels given: most recent sample across all label sets
+            best = None
+            for (n, _), s in self._latest.items():
+                if n == name and (best is None or s.t >= best.t):
+                    best = s
+            return best
+
+    def value(self, name: str, default: float = 0.0, **labels: str) -> float:
+        s = self.latest(name, **labels)
+        return default if s is None else s.value
+
+    def sum_latest(self, name: str) -> float:
+        """Sum the latest sample of every label set of ``name`` (e.g. total
+        lag across streams)."""
+        with self._lock:
+            return sum(s.value for (n, _), s in self._latest.items() if n == name)
+
+    def latest_by_label(self, name: str, label: str) -> dict[str, float]:
+        """Latest value per distinct value of ``label`` (e.g. per-stage
+        demand for the bin-packing policy)."""
+        out: dict[str, float] = {}
+        with self._lock:
+            for (n, _), s in self._latest.items():
+                if n == name:
+                    out[s.label(label, "")] = s.value
+        return out
+
+    def history(self, name: str | None = None, since: float = 0.0) -> list[Sample]:
+        with self._lock:
+            return [s for s in self._history
+                    if (name is None or s.name == name) and s.t >= since]
+
+    def series(self, name: str, since: float = 0.0) -> list[tuple[float, float]]:
+        return [(s.t, s.value) for s in self.history(name, since)]
+
+    def rate(self, name: str, window: float = 5.0, **labels: str) -> float:
+        """Per-second rate of a counter over its last ``window`` seconds."""
+        pts = [s for s in self.history(name) if not labels or
+               s.labels == tuple(sorted(labels.items()))]
+        if len(pts) < 2:
+            return 0.0
+        cutoff = pts[-1].t - window
+        pts = [s for s in pts if s.t >= cutoff] or pts[-2:]
+        dt = pts[-1].t - pts[0].t
+        return (pts[-1].value - pts[0].value) / dt if dt > 0 else 0.0
+
+    def clear(self) -> None:
+        with self._lock:
+            self._history.clear()
+            self._latest.clear()
+
+
+# ---------------------------------------------------------------------------
+# per-engine stat records (moved here from engines/{microbatch,continuous}.py
+# so both engines and the control plane share one vocabulary)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchMetrics:
+    batch_id: int
+    n_records: int
+    bytes: int
+    processing_delay: float
+    scheduling_delay: float
+    end_to_end_latency: float  # now - oldest record timestamp
+
+
+@dataclass
+class StreamStats:
+    batches: int = 0
+    records: int = 0
+    bytes: int = 0
+    processing_time: float = 0.0
+    history: list = field(default_factory=list)
+
+    @property
+    def records_per_sec(self) -> float:
+        return self.records / self.processing_time if self.processing_time else 0.0
+
+
+@dataclass
+class ContinuousStats:
+    records: int = 0
+    fired_windows: int = 0
+    late_records: int = 0
+    per_record_latency: list = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# the read-side view policies consume
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MetricsSnapshot:
+    """One coherent reconcile-time view assembled from the bus."""
+
+    t: float
+    lag: float  # total records behind, summed over streams
+    records_per_sec: float
+    processing_delay: float
+    scheduling_delay: float
+    busy_frac: float  # processing_delay / batch_interval (max over streams)
+    devices_total: int
+    devices_leased: int  # pool-wide, across ALL pilots in the service
+    utilization: float  # leased / total
+    #: devices serving the controlled pipeline (base + extensions) — what
+    #: sizing policies must compare against; devices_leased counts unrelated
+    #: pilots' leases too
+    pipeline_devices: int = 0
+    stage_demands: dict[str, float] = field(default_factory=dict)  # stream -> rec/s
+
+    @classmethod
+    def capture(cls, bus: MetricsBus, pool: Any | None = None,
+                pipeline_devices: int | None = None) -> "MetricsSnapshot":
+        """``pool`` is duck-typed (``DevicePool``): total/leased/utilization
+        are read live when given, else from ``pool.*`` gauges on the bus."""
+        probe_lag = bus.latest("elastic.lag")
+        lag = probe_lag.value if probe_lag is not None else bus.sum_latest("stream.lag")
+        if pool is not None:
+            total = pool.total_devices
+            leased = pool.leased_devices
+            util = pool.utilization
+        else:
+            total = int(bus.value("pool.devices_total"))
+            leased = int(bus.value("pool.devices_leased"))
+            util = bus.value("pool.utilization")
+        busy = 0.0
+        for _, v in bus.latest_by_label("stream.busy_frac", "stream").items():
+            busy = max(busy, v)
+        return cls(
+            t=time.monotonic(),
+            lag=lag,
+            records_per_sec=bus.sum_latest("stream.records_per_sec"),
+            processing_delay=bus.value("stream.processing_delay"),
+            scheduling_delay=bus.value("stream.scheduling_delay"),
+            busy_frac=busy,
+            devices_total=total,
+            devices_leased=leased,
+            utilization=util,
+            pipeline_devices=leased if pipeline_devices is None else pipeline_devices,
+            stage_demands=bus.latest_by_label("stream.records_per_sec", "stream"),
+        )

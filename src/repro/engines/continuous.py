@@ -11,22 +11,16 @@ from __future__ import annotations
 import threading
 import time
 from collections import defaultdict
-from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from repro.broker.cluster import BrokerCluster
 from repro.broker.consumer import Consumer, ConsumerGroup, Message
 from repro.core.compute_unit import ComputeUnit
 from repro.core.plugin import Lease, ManagerPlugin, register_plugin
+# stat record lives on the shared elastic metrics bus now; re-exported here
+# for backward compatibility
+from repro.elastic.metrics import ContinuousStats, MetricsBus
 from repro.streaming.windows import SessionWindow, WatermarkTracker
-
-
-@dataclass
-class ContinuousStats:
-    records: int = 0
-    fired_windows: int = 0
-    late_records: int = 0
-    per_record_latency: list = field(default_factory=list)
 
 
 class ContinuousStream:
@@ -41,6 +35,7 @@ class ContinuousStream:
         key_fn: Callable[[Message], Any] = lambda m: None,
         allowed_lateness: float = 0.0,
         emit: Callable[[Any], None] | None = None,
+        metrics: MetricsBus | None = None,
     ):
         self.cluster = cluster
         self.topic = topic
@@ -52,11 +47,13 @@ class ContinuousStream:
         self.emit = emit or (lambda out: None)
         self.watermarks = WatermarkTracker(allowed_lateness)
         self.stats = ContinuousStats()
+        self.metrics = metrics
         self._buffers: dict[tuple, list] = defaultdict(list)  # (key, window) -> msgs
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._fired = threading.Condition()
         self._error: BaseException | None = None
+        self._last_publish = 0.0
 
     def _ingest(self, msg: Message) -> None:
         ts = msg.timestamp
@@ -95,14 +92,40 @@ class ContinuousStream:
         while not self._stop.is_set():
             try:
                 msgs = self.consumer.poll(max_records=256, timeout=0.05)
+                t0 = time.monotonic()
                 for m in msgs:
                     self._ingest(m)
                 self._fire_ready()
                 if msgs:
                     self.consumer.commit()
+                    if self.metrics is not None:
+                        self._publish(len(msgs), time.monotonic() - t0)
+                elif self.metrics is not None:
+                    self._publish_idle()
             except BaseException as e:
                 self._error = e
                 break
+
+    def _publish_idle(self) -> None:
+        # zero the throughput gauge and refresh lag while starved so
+        # burst-time values don't stay latched on the bus
+        now = time.monotonic()
+        if now - self._last_publish < 0.5:
+            return
+        self._last_publish = now
+        self.metrics.publish("stream.records_per_sec", 0.0, stream=self.topic)
+        self.metrics.publish("stream.lag", sum(
+            self.cluster.lag(self.group.group, self.topic).values()), stream=self.topic)
+
+    def _publish(self, n: int, dt: float) -> None:
+        bus, labels = self.metrics, {"stream": self.topic}
+        self._last_publish = time.monotonic()
+        bus.publish("stream.records", self.stats.records, **labels)
+        bus.publish("stream.records_per_sec", n / dt if dt > 0 else 0.0, **labels)
+        bus.publish("stream.fired_windows", self.stats.fired_windows, **labels)
+        bus.publish("stream.late_records", self.stats.late_records, **labels)
+        bus.publish("stream.lag", sum(
+            self.cluster.lag(self.group.group, self.topic).values()), **labels)
 
     def start(self) -> "ContinuousStream":
         self._thread = threading.Thread(target=self._loop, daemon=True)

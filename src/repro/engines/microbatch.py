@@ -15,37 +15,16 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from repro.broker.cluster import BrokerCluster
 from repro.broker.consumer import Consumer, ConsumerGroup, Message
 from repro.core.compute_unit import ComputeUnit
 from repro.core.plugin import Lease, ManagerPlugin, register_plugin
+# stat records live on the shared elastic metrics bus now; re-exported here
+# for backward compatibility
+from repro.elastic.metrics import BatchMetrics, MetricsBus, StreamStats
 from repro.streaming.rate_control import PIDRateController
-
-
-@dataclass
-class BatchMetrics:
-    batch_id: int
-    n_records: int
-    bytes: int
-    processing_delay: float
-    scheduling_delay: float
-    end_to_end_latency: float  # now - oldest record timestamp
-
-
-@dataclass
-class StreamStats:
-    batches: int = 0
-    records: int = 0
-    bytes: int = 0
-    processing_time: float = 0.0
-    history: list = field(default_factory=list)
-
-    @property
-    def records_per_sec(self) -> float:
-        return self.records / self.processing_time if self.processing_time else 0.0
 
 
 class MicroBatchStream:
@@ -65,6 +44,7 @@ class MicroBatchStream:
         checkpoint_fn: Callable[[Any, dict[int, int]], None] | None = None,
         checkpoint_every: int = 1,
         deserialize: bool = True,
+        metrics: MetricsBus | None = None,
     ):
         self.cluster = cluster
         self.topic = topic
@@ -78,12 +58,17 @@ class MicroBatchStream:
         self.checkpoint_fn = checkpoint_fn
         self.checkpoint_every = checkpoint_every
         self.stats = StreamStats()
+        self.metrics = metrics
         self.on_rescale: Callable[[Any], Any] | None = None
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._batch_id = 0
         self._error: BaseException | None = None
         self._batch_done = threading.Condition()
+        self._last_publish = 0.0
+        # serializes state swaps between the batch loop and rescale(): an
+        # autoscaler-triggered reshard must not clobber an in-flight batch
+        self._state_lock = threading.Lock()
 
     # ---- loop -------------------------------------------------------------
 
@@ -106,7 +91,8 @@ class MicroBatchStream:
             return 0
         scheduling_delay = max(time.monotonic() - window_end, 0.0)
         t0 = time.monotonic()
-        self.state = self.process_fn(self.state, msgs)
+        with self._state_lock:
+            self.state = self.process_fn(self.state, msgs)
         dt = time.monotonic() - t0
 
         self._batch_id += 1
@@ -126,9 +112,35 @@ class MicroBatchStream:
                 now - min(m.timestamp for m in msgs),
             )
         )
+        if self.metrics is not None:
+            self._publish_batch(len(msgs), dt, scheduling_delay)
         with self._batch_done:
             self._batch_done.notify_all()
         return len(msgs)
+
+    def _publish_idle(self) -> None:
+        """Zero out throughput gauges while starved — otherwise the last
+        busy batch's records/sec stays latched on the bus and demand-driven
+        policies never see the traffic stop."""
+        now = time.monotonic()
+        if now - self._last_publish < self.batch_interval:
+            return
+        self._last_publish = now
+        labels = {"stream": self.topic}
+        self.metrics.publish("stream.records_per_sec", 0.0, **labels)
+        self.metrics.publish("stream.busy_frac", 0.0, **labels)
+        self.metrics.publish("stream.lag", sum(self.lag().values()), **labels)
+
+    def _publish_batch(self, n: int, dt: float, scheduling_delay: float) -> None:
+        bus, labels = self.metrics, {"stream": self.topic}
+        self._last_publish = time.monotonic()
+        bus.publish("stream.records", self.stats.records, **labels)
+        bus.publish("stream.records_per_sec", n / dt if dt > 0 else 0.0, **labels)
+        bus.publish("stream.processing_delay", dt, **labels)
+        bus.publish("stream.scheduling_delay", scheduling_delay, **labels)
+        bus.publish("stream.busy_frac", dt / self.batch_interval, **labels)
+        # committed offsets just advanced, so this is post-batch backlog
+        bus.publish("stream.lag", sum(self.lag().values()), **labels)
 
     def _loop(self) -> None:
         while not self._stop.is_set():
@@ -138,6 +150,8 @@ class MicroBatchStream:
                 self._error = e
                 break
             if n == 0:
+                if self.metrics is not None:
+                    self._publish_idle()
                 time.sleep(0.01)
 
     # ---- control ------------------------------------------------------------
@@ -167,6 +181,14 @@ class MicroBatchStream:
 
     def lag(self) -> dict[int, int]:
         return self.cluster.lag(self.group.group, self.topic)
+
+    def rescale(self, devices: list) -> None:
+        """Re-shard live state onto a changed device set. Blocks until any
+        in-flight batch commits its state, so the reshard never races it."""
+        if self.on_rescale is None:
+            return
+        with self._state_lock:
+            self.state = self.on_rescale(devices)
 
     # ---- failure recovery -----------------------------------------------------
 
@@ -210,8 +232,7 @@ class MicroBatchPlugin(ManagerPlugin):
 
     def _rescale(self) -> None:
         for s in self.streams:
-            if s.on_rescale is not None:
-                s.state = s.on_rescale(self.devices)
+            s.rescale(self.devices)
 
     def get_context(self, configuration: dict | None = None) -> "MicroBatchPlugin":
         return self

@@ -4,6 +4,8 @@ from repro.miniapps.mass import (
     KMeansClusterSource,
     KMeansStaticSource,
     LightsourceTemplateSource,
+    RateStep,
+    RateStepScenario,
     SourceConfig,
     StreamSource,
     TokenSource,
@@ -23,6 +25,8 @@ __all__ = [
     "LMTrainApp",
     "LightsourceTemplateSource",
     "PROCESSORS",
+    "RateStep",
+    "RateStepScenario",
     "ReconstructionApp",
     "SOURCES",
     "SourceConfig",

@@ -1,6 +1,9 @@
 """Window-assigner + watermark properties (hypothesis)."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.streaming import SessionWindow, SlidingWindow, TumblingWindow, WatermarkTracker
