@@ -1,0 +1,276 @@
+"""Hot-path before/after benchmark: shape-bucketed dispatch + async
+double-buffering vs the legacy one-compile-per-shape, block-every-batch path.
+
+Each scenario runs the SAME message trace through a legacy-configured
+processor (``bucketed/batched=False, async_depth=0``) and the overhauled one,
+in one process, and emits ``BENCH_hotpath.json`` with msgs/sec, p50/p99
+per-batch latency and compile counts for both — the repo's perf trajectory
+(ISSUE 2; see docs/perf.md for how to read it).
+
+    PYTHONPATH=src python -m benchmarks.hotpath [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "BENCH_hotpath.json")
+
+
+@dataclass
+class Msg:
+    """Broker-free stand-in for ``broker.consumer.Message`` — the benchmark
+    measures the compute hot path, not broker transport."""
+
+    value: Any
+    timestamp: float = 0.0
+
+
+def _stats_row(app, n_msgs: int, wall: float) -> dict:
+    return {
+        "msgs_per_sec": n_msgs / wall if wall > 0 else 0.0,
+        "items_per_sec": app.stats.items / wall if wall > 0 else 0.0,
+        "batch_latency_p50_s": app.stats.latency.p50,
+        "batch_latency_p99_s": app.stats.latency.p99,
+        "compiles": app.compiles,
+        "wall_s": wall,
+        "batches": app.stats.batches,
+        "messages": app.stats.messages,
+    }
+
+
+def _drive(app, batches, warmup=()) -> dict:
+    """Run ``warmup`` batches (compile coverage, excluded from stats), then
+    time the trace. Scenarios where recompiles ARE the measured pathology
+    (variable-rate kmeans) pass no warmup."""
+    state = None
+    for batch in warmup:
+        state = app.process(state, batch)
+    app.reset_stats()
+    n_msgs = 0
+    t0 = time.monotonic()
+    for batch in batches:
+        state = app.process(state, batch)
+        n_msgs += len(batch)
+    app.sync()
+    return _stats_row(app, n_msgs, time.monotonic() - t0)
+
+
+# ---------------------------------------------------------------------------
+# scenario: variable-rate StreamingKMeans (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+
+def bench_kmeans(quick: bool) -> dict:
+    from repro.miniapps import StreamingKMeans
+
+    n_batches = 24 if quick else 72
+    rng = np.random.default_rng(7)
+    # variable-rate trace: every batch has a distinct point count, the
+    # worst case for shape-specialized jit (one compile per batch)
+    sizes = rng.integers(300, 3000 if quick else 6000, size=n_batches)
+    batches = [[Msg(rng.normal(size=(int(n), 3)))] for n in sizes]
+
+    def make(bucketed, depth):
+        return StreamingKMeans(n_clusters=10, dim=3, seed=1,
+                               bucketed=bucketed, async_depth=depth)
+
+    before = _drive(make(False, 0), batches)
+    after_app = make(True, 2)
+    after = _drive(after_app, batches)
+    return {
+        "trace": {"batches": n_batches, "distinct_shapes": len(set(int(s) for s in sizes))},
+        "bucket_count": len(after_app.buckets),
+        "before": before,
+        "after": after,
+        "speedup_msgs_per_sec": after["msgs_per_sec"] / max(before["msgs_per_sec"], 1e-9),
+    }
+
+
+# ---------------------------------------------------------------------------
+# scenario: GridRec micro-batches (per-message loop vs stacked vmap)
+# ---------------------------------------------------------------------------
+
+
+def bench_gridrec(quick: bool) -> dict:
+    from repro.kernels.tomo import project_ref, shepp_logan
+    from repro.miniapps import ReconstructionApp
+    import jax.numpy as jnp
+
+    n = 32 if quick else 64
+    n_angles, n_det = (16, 48) if quick else (64, 96)
+    img = shepp_logan(n)
+    angles = jnp.linspace(0, jnp.pi, n_angles, endpoint=False)
+    sino = np.asarray(project_ref(img, angles, n_det))
+    rng = np.random.default_rng(3)
+    n_batches = 12 if quick else 32
+    # variable frames-per-batch: the legacy path loops (and re-materializes
+    # angles) per message; the batched path stacks each group into one call
+    batches = [[Msg(sino * (1.0 + 0.01 * j)) for j in range(int(rng.integers(1, 5)))]
+               for _ in range(n_batches)]
+
+    def make(batched, depth):
+        return ReconstructionApp("gridrec", n=n, batched=batched, async_depth=depth)
+
+    # fixed frame shape: both paths reach steady state after one compile per
+    # bucket, so warm each bucket size once and measure steady state
+    warmup = [[Msg(sino)] * k for k in (1, 2, 4)]
+    before = _drive(make(False, 0), batches, warmup=warmup)
+    after_app = make(True, 2)
+    after = _drive(after_app, batches, warmup=warmup)
+    return {
+        "trace": {"batches": n_batches, "frames": sum(len(b) for b in batches)},
+        "bucket_count": len(after_app.batch_buckets),
+        "before": before,
+        "after": after,
+        "speedup_msgs_per_sec": after["msgs_per_sec"] / max(before["msgs_per_sec"], 1e-9),
+    }
+
+
+# ---------------------------------------------------------------------------
+# scenario: LM serving (python decode loop vs fused lax.scan, full mode only)
+# ---------------------------------------------------------------------------
+
+
+def bench_lm_serve(quick: bool) -> dict | None:
+    if quick:
+        return None
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_arch
+    from repro.miniapps import LMServeApp
+
+    cfg = get_arch("smollm-135m").reduced(n_layers=2)
+    prompt_len, gen_tokens, req_batch = 16, 8, 2
+    app = LMServeApp(cfg, prompt_len=prompt_len, gen_tokens=gen_tokens,
+                     batch=req_batch, async_depth=2)
+    params = app.model.init(jax.random.key(0))
+    rng = np.random.default_rng(11)
+    batches = [[Msg(rng.integers(1, cfg.vocab_size, size=(req_batch, prompt_len)).astype(np.int32))
+                for _ in range(3)] for _ in range(24)]
+
+    # legacy baseline: per-message prefill + per-token python decode loop,
+    # blocking per message (the pre-overhaul LMServeApp.process)
+    prefill = jax.jit(app.model.prefill)
+    decode = jax.jit(app.model.decode)
+
+    def legacy(batches) -> dict:
+        import time as _t
+
+        n_msgs, items = 0, 0
+        lat = []
+        t0 = _t.monotonic()
+        for batch in batches:
+            tb = _t.monotonic()
+            for m in batch:
+                toks = jnp.asarray(m.value)
+                logits, cache = prefill(params, {"tokens": toks})
+                cache = jax.tree.map(
+                    lambda c: jnp.pad(c, [(0, 0)] * 2 + [(0, gen_tokens)] + [(0, 0)] * (c.ndim - 3))
+                    if c.ndim >= 4 else c, cache)
+                pos = jnp.full((toks.shape[0],), prompt_len - 1, jnp.int32)
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+                for _ in range(gen_tokens - 1):
+                    pos = pos + 1
+                    logits, cache = decode(params, cache, {"tokens": tok, "positions": pos})
+                    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                tok.block_until_ready()
+                items += toks.shape[0] * gen_tokens
+            lat.append(_t.monotonic() - tb)
+            n_msgs += len(batch)
+        wall = _t.monotonic() - t0
+        return {
+            "msgs_per_sec": n_msgs / wall,
+            "items_per_sec": items / wall,
+            "batch_latency_p50_s": float(np.quantile(lat, 0.5)),
+            "batch_latency_p99_s": float(np.quantile(lat, 0.99)),
+            "compiles": -1,
+            "wall_s": wall,
+            "batches": len(batches),
+            "messages": n_msgs,
+        }
+
+    legacy(batches[:1])  # warm the legacy jits (stats discarded)
+    before = legacy(batches)
+
+    state = app.process(params, batches[0])  # warm prefill/scan compiles
+    app.reset_stats()
+    n_msgs = 0
+    t0 = time.monotonic()
+    for batch in batches:
+        state = app.process(state, batch)
+        n_msgs += len(batch)
+    app.sync()
+    after = _stats_row(app, n_msgs, time.monotonic() - t0)
+    return {
+        "trace": {"batches": len(batches), "messages": n_msgs},
+        "before": before,
+        "after": after,
+        "speedup_msgs_per_sec": after["msgs_per_sec"] / max(before["msgs_per_sec"], 1e-9),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_all(quick: bool, out_path: str = DEFAULT_OUT) -> dict:
+    import jax
+
+    scenarios = {"kmeans_variable_rate": bench_kmeans(quick),
+                 "gridrec_microbatch": bench_gridrec(quick)}
+    lm = bench_lm_serve(quick)
+    if lm is not None:
+        scenarios["lm_serve"] = lm
+    report = {
+        "meta": {
+            "quick": quick,
+            "backend": jax.default_backend(),
+            "unix_time": time.time(),
+        },
+        "scenarios": scenarios,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def _rows(report: dict) -> list[tuple[str, float, str]]:
+    rows = []
+    for name, sc in report["scenarios"].items():
+        after = sc["after"]
+        rows.append((
+            f"hotpath_{name}",
+            after["batch_latency_p50_s"] * 1e6,
+            f"msgs_per_s={after['msgs_per_sec']:.2f};speedup={sc['speedup_msgs_per_sec']:.2f}x"
+            f";compiles={after['compiles']}",
+        ))
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    """benchmarks.run entry point: quick mode, JSON emitted as side effect."""
+    return _rows(bench_all(quick=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small shapes/traces (CI smoke)")
+    ap.add_argument("--out", default=DEFAULT_OUT, help="JSON report path")
+    args = ap.parse_args()
+    report = bench_all(args.quick, args.out)
+    for name, us, derived in _rows(report):
+        print(f"{name},{us:.1f},{derived}")
+    for name, sc in report["scenarios"].items():
+        print(f"  {name}: {sc['before']['msgs_per_sec']:.2f} -> {sc['after']['msgs_per_sec']:.2f} msgs/s "
+              f"({sc['speedup_msgs_per_sec']:.2f}x), compiles {sc['before']['compiles']} -> {sc['after']['compiles']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

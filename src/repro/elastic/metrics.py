@@ -198,6 +198,11 @@ class MetricsSnapshot:
     #: pilots' leases too
     pipeline_devices: int = 0
     stage_demands: dict[str, float] = field(default_factory=dict)  # stream -> rec/s
+    #: rolling per-batch compute-latency quantiles (max over streams,
+    #: ``stream.latency_p50/p99`` gauges) — lets policies react to compute
+    #: latency creep before it surfaces as lag
+    latency_p50: float = 0.0
+    latency_p99: float = 0.0
 
     @classmethod
     def capture(cls, bus: MetricsBus, pool: Any | None = None,
@@ -217,6 +222,8 @@ class MetricsSnapshot:
         busy = 0.0
         for _, v in bus.latest_by_label("stream.busy_frac", "stream").items():
             busy = max(busy, v)
+        p50 = max(bus.latest_by_label("stream.latency_p50", "stream").values(), default=0.0)
+        p99 = max(bus.latest_by_label("stream.latency_p99", "stream").values(), default=0.0)
         return cls(
             t=time.monotonic(),
             lag=lag,
@@ -229,4 +236,6 @@ class MetricsSnapshot:
             utilization=util,
             pipeline_devices=leased if pipeline_devices is None else pipeline_devices,
             stage_demands=bus.latest_by_label("stream.records_per_sec", "stream"),
+            latency_p50=p50,
+            latency_p99=p99,
         )

@@ -24,6 +24,7 @@ from repro.core.plugin import Lease, ManagerPlugin, register_plugin
 # stat records live on the shared elastic metrics bus now; re-exported here
 # for backward compatibility
 from repro.elastic.metrics import BatchMetrics, MetricsBus, StreamStats
+from repro.streaming.dispatch import LatencyWindow
 from repro.streaming.rate_control import PIDRateController
 
 
@@ -45,6 +46,7 @@ class MicroBatchStream:
         checkpoint_every: int = 1,
         deserialize: bool = True,
         metrics: MetricsBus | None = None,
+        sync_fn: Callable[[], None] | None = None,
     ):
         self.cluster = cluster
         self.topic = topic
@@ -57,7 +59,17 @@ class MicroBatchStream:
         self.controller = PIDRateController(batch_interval) if backpressure else None
         self.checkpoint_fn = checkpoint_fn
         self.checkpoint_every = checkpoint_every
+        # double-buffered processors dispatch work asynchronously; sync_fn is
+        # the barrier that lands in-flight batches before state escapes the
+        # loop (checkpoint, rescale, stop). Auto-wired from a bound
+        # processor's ``sync`` method when not given explicitly.
+        owner = getattr(process_fn, "__self__", None)
+        if sync_fn is None and owner is not None:
+            sync_fn = getattr(owner, "sync", None)
+        self.sync_fn = sync_fn
         self.stats = StreamStats()
+        self.latency = LatencyWindow()
+        self._processor = owner
         self.metrics = metrics
         self.on_rescale: Callable[[Any], Any] | None = None
         self._stop = threading.Event()
@@ -97,6 +109,8 @@ class MicroBatchStream:
 
         self._batch_id += 1
         if self.checkpoint_fn and self._batch_id % self.checkpoint_every == 0:
+            if self.sync_fn is not None:  # land in-flight work before snapshotting
+                self.sync_fn()
             self.checkpoint_fn(self.state, self.consumer.positions())
         self.consumer.commit()  # after checkpoint -> exactly-once on replay
 
@@ -106,6 +120,7 @@ class MicroBatchStream:
         self.stats.batches += 1
         self.stats.records += len(msgs)
         self.stats.processing_time += dt
+        self.latency.record(dt)
         self.stats.history.append(
             BatchMetrics(
                 self._batch_id, len(msgs), 0, dt, scheduling_delay,
@@ -117,6 +132,16 @@ class MicroBatchStream:
         with self._batch_done:
             self._batch_done.notify_all()
         return len(msgs)
+
+    def _compute_latency(self) -> LatencyWindow:
+        """The latency window behind the bus gauges. An async (double-
+        buffered) processor's process_fn returns before the device finishes,
+        making the engine-side dt mere dispatch time — prefer the
+        processor's own completion-latency window when it keeps one."""
+        lat = getattr(getattr(self._processor, "stats", None), "latency", None)
+        if isinstance(lat, LatencyWindow) and len(lat):
+            return lat
+        return self.latency
 
     def _publish_idle(self) -> None:
         """Zero out throughput gauges while starved — otherwise the last
@@ -139,6 +164,11 @@ class MicroBatchStream:
         bus.publish("stream.processing_delay", dt, **labels)
         bus.publish("stream.scheduling_delay", scheduling_delay, **labels)
         bus.publish("stream.busy_frac", dt / self.batch_interval, **labels)
+        # rolling compute-latency quantiles: scaling policies can react to
+        # batch latency creep before it shows up as lag
+        lat = self._compute_latency()
+        bus.publish("stream.latency_p50", lat.p50, **labels)
+        bus.publish("stream.latency_p99", lat.p99, **labels)
         # committed offsets just advanced, so this is post-batch backlog
         bus.publish("stream.lag", sum(self.lag().values()), **labels)
 
@@ -176,6 +206,8 @@ class MicroBatchStream:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=5)
+        if self.sync_fn is not None:  # land in-flight batches: final state/stats
+            self.sync_fn()
         if self._error:
             raise self._error
 
@@ -184,10 +216,14 @@ class MicroBatchStream:
 
     def rescale(self, devices: list) -> None:
         """Re-shard live state onto a changed device set. Blocks until any
-        in-flight batch commits its state, so the reshard never races it."""
+        in-flight batch commits its state, so the reshard never races it:
+        the state lock serializes against the batch loop, and sync_fn drains
+        the processor's async double-buffer before buffers move devices."""
         if self.on_rescale is None:
             return
         with self._state_lock:
+            if self.sync_fn is not None:
+                self.sync_fn()
             self.state = self.on_rescale(devices)
 
     # ---- failure recovery -----------------------------------------------------

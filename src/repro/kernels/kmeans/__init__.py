@@ -1,4 +1,4 @@
-from repro.kernels.kmeans.ops import assign, minibatch_update
-from repro.kernels.kmeans.ref import assign_ref, update_ref
+from repro.kernels.kmeans.ops import assign, minibatch_update, minibatch_update_masked
+from repro.kernels.kmeans.ref import assign_ref, update_ref, update_scatter
 
-__all__ = ["assign", "assign_ref", "minibatch_update", "update_ref"]
+__all__ = ["assign", "assign_ref", "minibatch_update", "minibatch_update_masked", "update_ref", "update_scatter"]

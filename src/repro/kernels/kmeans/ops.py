@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.kmeans.kernel import assign_pallas
-from repro.kernels.kmeans.ref import assign_ref, update_ref
+from repro.kernels.kmeans.ref import assign_ref, update_ref, update_scatter
 
 
 def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
@@ -41,11 +41,36 @@ def minibatch_update(points, centroids, *, decay: float = 0.9, use_kernel: bool 
     (paper §3.2.1 "averaging using a decay factor")."""
     k = centroids.shape[0]
     labels, dist = assign(points, centroids, use_kernel=use_kernel, interpret=interpret)
-    sums, counts = update_ref(points, labels, k)
+    sums, counts = update_scatter(points, labels, k)
     batch_means = sums / jnp.maximum(counts[:, None], 1.0)
     seen = (counts > 0)[:, None]
     new_centroids = jnp.where(
         seen, decay * centroids + (1.0 - decay) * batch_means, centroids
     )
     inertia = dist.sum()
+    return new_centroids.astype(centroids.dtype), labels, inertia
+
+
+def minibatch_update_masked(points, centroids, n_valid, *, decay: float = 0.9,
+                            use_kernel: bool = False, interpret: bool = True):
+    """Bucket-padded streaming step: rows ``>= n_valid`` are zero padding and
+    contribute nothing to the update or the inertia.
+
+    This is the shape-bucketed hot-path entry: a jitted wrapper compiles once
+    per *bucket* shape while ``n_valid`` stays a dynamic scalar, so variable
+    batch sizes reuse the same executable. Centroids are bit-identical to
+    :func:`minibatch_update` on the unpadded batch (padding rows carry exact
+    zero weight in every accumulation). Padding rows get label ``-1``.
+    """
+    k = centroids.shape[0]
+    labels, dist = assign(points, centroids, use_kernel=use_kernel, interpret=interpret)
+    mask = jnp.arange(points.shape[0]) < n_valid
+    sums, counts = update_scatter(points, labels, k, mask=mask)
+    batch_means = sums / jnp.maximum(counts[:, None], 1.0)
+    seen = (counts > 0)[:, None]
+    new_centroids = jnp.where(
+        seen, decay * centroids + (1.0 - decay) * batch_means, centroids
+    )
+    inertia = jnp.where(mask, dist, 0.0).sum()
+    labels = jnp.where(mask, labels, -1)
     return new_centroids.astype(centroids.dtype), labels, inertia

@@ -18,9 +18,40 @@ def assign_ref(points: jnp.ndarray, centroids: jnp.ndarray):
     return labels, jnp.min(d2, axis=1)
 
 
-def update_ref(points: jnp.ndarray, labels: jnp.ndarray, k: int):
-    """Mini-batch centroid sums + counts (the model-update step)."""
+def update_ref(points: jnp.ndarray, labels: jnp.ndarray, k: int, mask: jnp.ndarray | None = None):
+    """Mini-batch centroid sums + counts (the model-update step).
+
+    ``mask`` (N,) bool zeroes out padding rows from a bucket-padded batch.
+    One-hot matmul formulation — MXU-friendly, but its reduction tree over N
+    depends on the padded length, so results are only *approximately* equal
+    across bucket sizes (use :func:`update_scatter` when bucketed batches
+    must be bit-identical to the unpadded computation).
+    """
     onehot = jnp.zeros((points.shape[0], k), jnp.float32).at[jnp.arange(points.shape[0]), labels].set(1.0)
+    if mask is not None:
+        onehot = onehot * mask[:, None].astype(jnp.float32)
     sums = onehot.T @ points.astype(jnp.float32)  # (K, D)
     counts = onehot.sum(axis=0)  # (K,)
+    return sums, counts
+
+
+def update_scatter(points: jnp.ndarray, labels: jnp.ndarray, k: int,
+                   mask: jnp.ndarray | None = None):
+    """Centroid sums + counts via an order-preserving scatter-add.
+
+    Scatter applies updates in row order, so appending zero-weight padding
+    rows (the shape-bucketed hot path) leaves every accumulator bit-identical
+    to the unpadded batch — adding IEEE +0.0 is exact and the live rows keep
+    their accumulation order. This is the streaming update path; the one-hot
+    matmul (:func:`update_ref`) stays as the MXU-friendly oracle.
+    """
+    pts = points.astype(jnp.float32)
+    if mask is not None:
+        w = mask.astype(jnp.float32)
+        labels = jnp.where(mask, labels, 0)  # keep indices in range; weight 0
+        pts = pts * w[:, None]
+    else:
+        w = jnp.ones((points.shape[0],), jnp.float32)
+    sums = jnp.zeros((k, points.shape[1]), jnp.float32).at[labels].add(pts)
+    counts = jnp.zeros((k,), jnp.float32).at[labels].add(w)
     return sums, counts

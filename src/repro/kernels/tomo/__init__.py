@@ -1,12 +1,22 @@
-from repro.kernels.tomo.ops import backproject, gridrec, mlem, project, shepp_logan
+from repro.kernels.tomo.ops import (
+    backproject,
+    gridrec,
+    gridrec_batch,
+    mlem,
+    mlem_batch,
+    project,
+    shepp_logan,
+)
 from repro.kernels.tomo.ref import backproject_ref, gridrec_ref, mlem_ref, project_ref, ramp_filter
 
 __all__ = [
     "backproject",
     "backproject_ref",
     "gridrec",
+    "gridrec_batch",
     "gridrec_ref",
     "mlem",
+    "mlem_batch",
     "mlem_ref",
     "project",
     "project_ref",

@@ -56,6 +56,38 @@ def backproject_ref(sino: jax.Array, angles: jax.Array, n: int) -> jax.Array:
     return acc.reshape(n, n)
 
 
+def project_ref_batch(imgs: jax.Array, angles: jax.Array, n_det: int) -> jax.Array:
+    """imgs (B, n, n) -> sinograms (B, A, n_det).
+
+    Hand-batched rather than vmapped: the angle weight matrix W is built once
+    per angle and contracted against the whole batch (matvec -> matmul), which
+    keeps the W-construction fused — vmapping the scalar path instead makes
+    XLA materialize W per batch element and runs ~4x slower.
+    """
+    n = imgs.shape[-1]
+    flats = imgs.reshape(imgs.shape[0], -1).astype(jnp.float32)  # (B, P)
+
+    def one(theta):
+        return flats @ _weights(n, n_det, theta)  # (B, n_det)
+
+    out = jax.lax.map(one, angles.astype(jnp.float32))  # (A, B, n_det)
+    return jnp.swapaxes(out, 0, 1)
+
+
+def backproject_ref_batch(sinos: jax.Array, angles: jax.Array, n: int) -> jax.Array:
+    """sinograms (B, A, n_det) -> images (B, n, n); see project_ref_batch."""
+    n_det = sinos.shape[-1]
+
+    def one(carry, inp):
+        theta, rows = inp  # rows (B, n_det)
+        return carry + _weights(n, n_det, theta) @ rows.astype(jnp.float32).T, None
+
+    acc0 = jnp.zeros((n * n, sinos.shape[0]), jnp.float32)
+    acc, _ = jax.lax.scan(
+        one, acc0, (angles.astype(jnp.float32), jnp.swapaxes(sinos, 0, 1)))
+    return jnp.moveaxis(acc, -1, 0).reshape(sinos.shape[0], n, n)
+
+
 # ---------------------------------------------------------------------------
 # reconstruction algorithms (paper §3.2.2 / §5)
 # ---------------------------------------------------------------------------

@@ -10,9 +10,18 @@ Pluggable processors for the micro-batch engine:
 Each exposes ``process(state, msgs) -> state`` for
 ``MicroBatchPlugin.stream`` plus an ``on_rescale(devices)`` hook used by the
 elastic path (live state resharding).
+
+Hot-path design (docs/perf.md): variable-length batches are padded to a
+small set of shape buckets so steady state never recompiles; per-message
+Python loops are replaced with stacked/vmapped per-micro-batch calls;
+results are double-buffered (``streaming.dispatch.AsyncWindow``) so batch
+N+1 dispatches while N executes, syncing only at stats/checkpoint/rescale
+boundaries; and ``use_kernel=True`` routes through the Pallas kernels
+(native on TPU, interpret-mode fallback elsewhere).
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any
@@ -23,6 +32,14 @@ import numpy as np
 
 from repro.kernels import kmeans as kmeans_ops
 from repro.kernels import tomo as tomo_ops
+from repro.streaming.dispatch import (
+    AsyncWindow,
+    LatencyWindow,
+    ShapeBuckets,
+    compile_count,
+    kernel_interpret,
+    pad_rows,
+)
 
 
 @dataclass
@@ -31,40 +48,138 @@ class AppStats:
     items: int = 0
     batches: int = 0
     compute_time: float = 0.0
+    latency: LatencyWindow = field(default_factory=LatencyWindow)
 
     @property
     def msgs_per_sec(self) -> float:
         return self.messages / self.compute_time if self.compute_time else 0.0
 
 
-class StreamingKMeans:
-    """Assign incoming points to centroids, update the model with decay."""
+class _HotPathApp:
+    """Shared double-buffering plumbing for the MASA processors.
+
+    Subclasses dispatch work with :meth:`_submit` and override
+    :meth:`_on_complete` to fold a finished batch's (tiny, already-computed)
+    outputs into their exposed attributes. ``sync()`` is the barrier the
+    engine calls at checkpoint/rescale boundaries; stats accessors that need
+    completed results call it implicitly.
+    """
+
+    def _init_hotpath(self, *, async_depth: int = 2, metrics: Any = None,
+                      name: str | None = None) -> None:
+        self.stats = AppStats()
+        self.metrics = metrics
+        self._metrics_name = name or type(self).__name__
+        self._window = AsyncWindow(async_depth, self.stats.latency)
+
+    def _submit(self, result: Any, meta: Any = None, t0: float | None = None) -> None:
+        """Enqueue a dispatched batch; ``t0`` = start of the batch's host
+        work, so drained latencies span prep+compute. ``compute_time`` sums
+        those per-batch completion latencies — identical to the legacy
+        block-every-batch accounting at depth 0, and the honest per-batch
+        cost (not mere dispatch time) when batches overlap."""
+        for res, m, dt in self._window.push(result, meta, t0=t0):
+            self.stats.compute_time += dt
+            self._on_complete(res, m, dt)
+            self._publish_latency()
+
+    def sync(self) -> None:
+        """Block until every in-flight batch has completed (the
+        stats/checkpoint/rescale barrier — see docs/perf.md)."""
+        done = self._window.sync()
+        if not done:
+            return
+        for res, m, dt in done:
+            self.stats.compute_time += dt
+            self._on_complete(res, m, dt)
+        self._publish_latency()
+
+    def _on_complete(self, result: Any, meta: Any, dt: float) -> None:
+        pass
+
+    def reset_stats(self) -> None:
+        """Sync and zero the counters (benchmarks: exclude warmup batches)."""
+        self.sync()
+        self.stats = AppStats()
+        self._window.latency = self.stats.latency
+
+    def _publish_latency(self) -> None:
+        if self.metrics is None or len(self.stats.latency) == 0:
+            return
+        lat, labels = self.stats.latency, {"app": self._metrics_name}
+        self.metrics.publish("app.latency_p50", lat.p50, **labels)
+        self.metrics.publish("app.latency_p99", lat.p99, **labels)
+
+    @property
+    def in_flight(self) -> int:
+        return self._window.in_flight
+
+
+class StreamingKMeans(_HotPathApp):
+    """Assign incoming points to centroids, update the model with decay.
+
+    ``bucketed=True`` pads each batch up to a power-of-two row bucket and
+    runs the masked update — bit-identical centroids, at most
+    ``len(buckets)`` compiles regardless of how batch sizes vary.
+    ``bucketed=False, async_depth=0`` reproduces the legacy one-compile-per-
+    shape, block-every-batch behavior (the benchmark baseline).
+    """
 
     def __init__(self, n_clusters: int = 10, dim: int = 3, *, decay: float = 0.9,
-                 use_kernel: bool = False, seed: int = 0):
+                 use_kernel: bool = False, seed: int = 0,
+                 bucketed: bool = True, buckets: ShapeBuckets | None = None,
+                 async_depth: int = 2, interpret: bool | None = None,
+                 metrics: Any = None):
         rng = np.random.default_rng(seed)
         self.centroids = jnp.asarray(rng.normal(size=(n_clusters, dim)), jnp.float32)
         self.decay = decay
         self.use_kernel = use_kernel
-        self.stats = AppStats()
-        self._step = jax.jit(
-            lambda pts, cen: kmeans_ops.minibatch_update(
-                pts, cen, decay=decay, use_kernel=False
-            )
-        )
+        self.bucketed = bucketed
+        self.buckets = buckets or ShapeBuckets(min_size=512, max_size=65536)
+        self._init_hotpath(async_depth=async_depth, metrics=metrics, name="kmeans")
+        self._inertia = float("nan")
+        if interpret is None:
+            interpret = kernel_interpret()
+        self._step = jax.jit(functools.partial(
+            kmeans_ops.minibatch_update_masked,
+            decay=decay, use_kernel=use_kernel, interpret=interpret,
+        ))
+        self._step_legacy = jax.jit(functools.partial(
+            kmeans_ops.minibatch_update,
+            decay=decay, use_kernel=use_kernel, interpret=interpret,
+        ))
 
     def process(self, state, msgs):
         centroids = state if state is not None else self.centroids
-        pts = jnp.asarray(np.concatenate([np.asarray(m.value) for m in msgs]), jnp.float32)
+        pts = np.concatenate([np.asarray(m.value) for m in msgs]).astype(np.float32)
+        n = pts.shape[0]
         t0 = time.monotonic()
-        centroids, labels, inertia = self._step(pts, centroids)
-        centroids.block_until_ready()
-        self.stats.compute_time += time.monotonic() - t0
+        if self.bucketed:
+            padded = pad_rows(pts, self.buckets.fit(n))
+            # n is a dynamic scalar: every size sharing a bucket reuses the
+            # same executable
+            centroids, labels, inertia = self._step(jnp.asarray(padded), centroids, n)
+        else:
+            centroids, labels, inertia = self._step_legacy(jnp.asarray(pts), centroids)
         self.stats.messages += len(msgs)
-        self.stats.items += pts.shape[0]
+        self.stats.items += n
         self.stats.batches += 1
-        self.inertia = float(inertia) / max(pts.shape[0], 1)
+        self._submit(centroids, meta=(inertia, n), t0=t0)
         return centroids
+
+    def _on_complete(self, result, meta, dt):
+        inertia, n = meta
+        self._inertia = float(inertia) / max(n, 1)
+
+    @property
+    def inertia(self) -> float:
+        """Mean inertia of the most recent batch (syncs in-flight work)."""
+        self.sync()
+        return self._inertia
+
+    @property
+    def compiles(self) -> int:
+        return compile_count(self._step if self.bucketed else self._step_legacy)
 
     def on_rescale(self, devices):
         # centroids are tiny: re-placement is a device_put
@@ -73,48 +188,109 @@ class StreamingKMeans:
         return f
 
 
-class ReconstructionApp:
-    """Per-frame tomographic reconstruction (GridRec or ML-EM)."""
+class ReconstructionApp(_HotPathApp):
+    """Per-frame tomographic reconstruction (GridRec or ML-EM).
+
+    ``batched=True`` groups a micro-batch's frames by sinogram shape, stacks
+    each group and reconstructs it in one vmapped call, padding the stack
+    depth to a small bucket set so compile count stays bounded.
+    ``batched=False, async_depth=0`` is the legacy per-message loop.
+    """
 
     def __init__(self, algorithm: str = "gridrec", *, n: int = 64, mlem_iters: int = 4,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, batched: bool = True,
+                 batch_buckets: ShapeBuckets | None = None, async_depth: int = 2,
+                 interpret: bool | None = None, metrics: Any = None):
         assert algorithm in ("gridrec", "mlem")
         self.algorithm = algorithm
         self.n = n
-        self.stats = AppStats()
+        self.use_kernel = use_kernel
+        self.batched = batched
+        self.batch_buckets = batch_buckets or ShapeBuckets(min_size=1, max_size=8)
+        self._init_hotpath(async_depth=async_depth, metrics=metrics, name=algorithm)
+        self._angles_cache: dict[int, jax.Array] = {}
+        if interpret is None:
+            interpret = kernel_interpret()
         if algorithm == "gridrec":
-            self._rec = jax.jit(
-                lambda sino, angles: tomo_ops.gridrec(sino, angles, n, use_kernel=False)
-            )
+            one = functools.partial(tomo_ops.gridrec, n=n,
+                                    use_kernel=use_kernel, interpret=interpret)
+            many = functools.partial(tomo_ops.gridrec_batch, n=n,
+                                     use_kernel=use_kernel, interpret=interpret)
         else:
-            self._rec = jax.jit(
-                lambda sino, angles: tomo_ops.mlem(sino, angles, n, iters=mlem_iters, use_kernel=False)
-            )
+            one = functools.partial(tomo_ops.mlem, n=n, iters=mlem_iters,
+                                    use_kernel=use_kernel, interpret=interpret)
+            many = functools.partial(tomo_ops.mlem_batch, n=n, iters=mlem_iters,
+                                     use_kernel=use_kernel, interpret=interpret)
+        self._rec = jax.jit(one)
+        self._rec_batch = jax.jit(many)
+
+    def _angles(self, n_angles: int) -> jax.Array:
+        """Per-shape cache: the same angle grid is re-used for every frame of
+        that sinogram shape instead of re-materializing per message."""
+        a = self._angles_cache.get(n_angles)
+        if a is None:
+            a = self._angles_cache[n_angles] = jnp.linspace(
+                0, jnp.pi, n_angles, endpoint=False)
+        return a
 
     def process(self, state, msgs):
-        recon = None
         t0 = time.monotonic()
-        for m in msgs:
-            sino = jnp.asarray(np.asarray(m.value), jnp.float32)
-            a = sino.shape[0]
-            angles = jnp.linspace(0, jnp.pi, a, endpoint=False)
-            recon = self._rec(sino, angles)
-        if recon is not None:
-            recon.block_until_ready()
-        self.stats.compute_time += time.monotonic() - t0
+        if self.batched:
+            recon = self._process_batched(msgs)
+        else:
+            recon = self._process_loop(msgs)
         self.stats.messages += len(msgs)
+        self.stats.items += len(msgs)
         self.stats.batches += 1
+        self._submit(recon, t0=t0)
         return recon  # last reconstruction = state (exposed for inspection)
 
+    def _process_batched(self, msgs):
+        groups: dict[tuple, list[np.ndarray]] = {}
+        for m in msgs:
+            sino = np.asarray(m.value, np.float32)
+            groups.setdefault(sino.shape, []).append(sino)
+        last_shape = np.asarray(msgs[-1].value).shape
+        recon = None
+        for shape, frames in groups.items():
+            angles = self._angles(shape[0])
+            if len(frames) == 1:
+                # the scalar path beats a B=1 batched matmul (degenerate gemm)
+                rec = self._rec(jnp.asarray(frames[0]), angles)
+            else:
+                stack = pad_rows(np.stack(frames), self.batch_buckets.fit(len(frames)))
+                rec = self._rec_batch(jnp.asarray(stack), angles)[len(frames) - 1]
+            # state contract: the LAST message's reconstruction (its frame is
+            # the last element of its shape group)
+            if shape == last_shape:
+                recon = rec
+        return recon
 
-class LMTrainApp:
+    def _process_loop(self, msgs):
+        recon = None
+        for m in msgs:
+            sino = jnp.asarray(np.asarray(m.value), jnp.float32)
+            angles = jnp.linspace(0, jnp.pi, sino.shape[0], endpoint=False)
+            recon = self._rec(sino, angles)
+        return recon
+
+    @property
+    def compiles(self) -> int:
+        return compile_count(self._rec_batch if self.batched else self._rec)
+
+
+class LMTrainApp(_HotPathApp):
     """Streaming LM training: consume token messages, run train steps.
 
     State = (params, opt_state); rescale re-lowers the step on a new mesh
-    and device_puts the live state (checkpoint-free migration).
+    and device_puts the live state (checkpoint-free migration). The train
+    step donates params/opt-state buffers, and per-step losses are read
+    back lazily at sync boundaries instead of forcing a device round-trip
+    per batch.
     """
 
-    def __init__(self, cfg, *, mesh=None, opt_cfg=None, seqs_per_step: int = 8, seq_len: int = 128):
+    def __init__(self, cfg, *, mesh=None, opt_cfg=None, seqs_per_step: int = 8,
+                 seq_len: int = 128, async_depth: int = 2, metrics: Any = None):
         from repro.launch.mesh import make_local_mesh
         from repro.models import build_model
         from repro.configs.base import ShapeConfig
@@ -125,9 +301,9 @@ class LMTrainApp:
         self.mesh = mesh or make_local_mesh()
         self.shape = ShapeConfig("stream", seq_len, seqs_per_step, "train")
         self.opt_cfg = opt_cfg
-        self.bundle = build_train_step(self.model, self.mesh, self.shape, opt_cfg, donate=False)
-        self.stats = AppStats()
-        self.losses: list[float] = []
+        self.bundle = build_train_step(self.model, self.mesh, self.shape, opt_cfg, donate=True)
+        self._init_hotpath(async_depth=async_depth, metrics=metrics, name="lm_train")
+        self._losses: list[float] = []
 
     def init_state(self, seed: int = 0):
         from repro.runtime.optimizer import Optimizer, OptimizerConfig
@@ -151,13 +327,24 @@ class LMTrainApp:
                 state["params"], state["opt"], {"tokens": jnp.asarray(batch, jnp.int32)}
             )
             state = {"params": params, "opt": opt}
-        jax.block_until_ready(state["params"])
-        self.losses.append(float(metrics["loss"]))
-        self.stats.compute_time += time.monotonic() - t0
         self.stats.messages += len(msgs)
         self.stats.items += int(len(toks)) * self.shape.seq_len
         self.stats.batches += 1
+        self._submit(metrics["loss"], t0=t0)
         return state
+
+    def _on_complete(self, result, meta, dt):
+        self._losses.append(float(result))
+
+    @property
+    def losses(self) -> list[float]:
+        """Per-batch final-step losses (syncs in-flight work)."""
+        self.sync()
+        return self._losses
+
+    @property
+    def compiles(self) -> int:
+        return compile_count(self.bundle.fn)
 
     def on_rescale(self, devices):
         """Elastic: rebuild mesh over the new device set, reshard live state."""
@@ -165,9 +352,10 @@ class LMTrainApp:
         from repro.runtime.steps import build_train_step
 
         def f(state):
+            self.sync()  # in-flight steps must land before buffers move
             n = len(devices)
             self.mesh = make_mesh((n, 1), ("data", "model"))
-            self.bundle = build_train_step(self.model, self.mesh, self.shape, self.opt_cfg, donate=False)
+            self.bundle = build_train_step(self.model, self.mesh, self.shape, self.opt_cfg, donate=True)
             if state is not None:
                 p_sh, o_sh, _ = self.bundle.in_shardings
                 state = {
@@ -179,48 +367,97 @@ class LMTrainApp:
         return f
 
 
-class LMServeApp:
-    """Streaming LM inference: prefill each request batch, decode n tokens."""
+class LMServeApp(_HotPathApp):
+    """Streaming LM inference: prefill each request batch, decode n tokens.
 
-    def __init__(self, cfg, *, mesh=None, prompt_len: int = 32, gen_tokens: int = 8, batch: int = 4):
-        from repro.launch.mesh import make_local_mesh
+    The whole micro-batch's requests are stacked into one prefill (rows
+    padded to a bucket) and the per-token decode loop runs as one fused
+    ``lax.scan`` with the KV cache donated between steps.
+    """
+
+    def __init__(self, cfg, *, mesh=None, prompt_len: int = 32, gen_tokens: int = 8,
+                 batch: int = 4, async_depth: int = 2, metrics: Any = None,
+                 row_buckets: ShapeBuckets | None = None):
         from repro.models import build_model
-        from repro.configs.base import ShapeConfig
 
         self.cfg = cfg
         self.model = build_model(cfg)
-        self.mesh = mesh or make_local_mesh()
+        # single-host serving jits the model directly; a mesh is only needed
+        # when the caller shards params explicitly, so none is built here
+        self.mesh = mesh
         self.prompt_len = prompt_len
         self.gen_tokens = gen_tokens
         self.batch = batch
-        self.stats = AppStats()
+        self.row_buckets = row_buckets or ShapeBuckets(min_size=batch, max_size=batch * 8)
+        self._init_hotpath(async_depth=async_depth, metrics=metrics, name="lm_serve")
         self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode)
+        # donate the KV cache: each scan step reuses the same buffers
+        self._generate = jax.jit(self._generate_impl, donate_argnums=(1,))
+
+    def _generate_impl(self, params, cache, tok, pos):
+        def step(carry, _):
+            tok, pos, cache = carry
+            pos = pos + 1
+            logits, cache = self.model.decode(params, cache, {"tokens": tok, "positions": pos})
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (tok, pos, cache), tok
+
+        (tok, _, _), toks = jax.lax.scan(
+            step, (tok, pos, cache), None, length=self.gen_tokens - 1)
+        return toks  # (gen_tokens-1, B, 1)
+
+    def _stack_requests(self, msgs) -> np.ndarray:
+        """(sum_i b_i, prompt_len) int32: every message's requests in one
+        batch, right-padded to prompt_len columns."""
+        rows = []
+        for m in msgs:
+            t = np.asarray(m.value)[: self.batch, : self.prompt_len].astype(np.int32)
+            if t.shape[1] < self.prompt_len:
+                t = np.pad(t, [(0, 0), (0, self.prompt_len - t.shape[1])])
+            rows.append(t)
+        return np.concatenate(rows)
+
+    def _serve_batch(self, params, msgs):
+        """One stacked prefill + fused scan decode for a whole micro-batch.
+        Returns (seq (gen_tokens, B, 1) greedy tokens, n_req live rows)."""
+        toks = self._stack_requests(msgs)
+        n_req = toks.shape[0]
+        tok_in = jnp.asarray(pad_rows(toks, self.row_buckets.fit(n_req)))
+        logits, cache = self._prefill(params, {"tokens": tok_in})
+        # grow cache for generated tokens
+        cache = jax.tree.map(
+            lambda c: jnp.pad(c, [(0, 0)] * 2 + [(0, self.gen_tokens)] + [(0, 0)] * (c.ndim - 3))
+            if c.ndim >= 4 else c,
+            cache,
+        )
+        pos = jnp.full((tok_in.shape[0],), self.prompt_len - 1, jnp.int32)
+        tok0 = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        if self.gen_tokens > 1:
+            rest = self._generate(params, cache, tok0, pos)  # (T-1, B, 1)
+            seq = jnp.concatenate([tok0[None], rest])
+        else:
+            seq = tok0[None]
+        return seq, n_req
 
     def process(self, state, msgs):
         params = state  # serving state = model params
         t0 = time.monotonic()
-        for m in msgs:
-            toks = jnp.asarray(np.asarray(m.value)[: self.batch, : self.prompt_len], jnp.int32)
-            logits, cache = self._prefill(params, {"tokens": toks})
-            # grow cache for generated tokens
-            cache = jax.tree.map(
-                lambda c: jnp.pad(c, [(0, 0)] * 2 + [(0, self.gen_tokens)] + [(0, 0)] * (c.ndim - 3))
-                if c.ndim >= 4 else c,
-                cache,
-            )
-            pos = jnp.full((toks.shape[0],), self.prompt_len - 1, jnp.int32)
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            for _ in range(self.gen_tokens - 1):
-                pos = pos + 1
-                logits, cache = self._decode(params, cache, {"tokens": tok, "positions": pos})
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            tok.block_until_ready()
-            self.stats.items += int(toks.shape[0]) * self.gen_tokens
-        self.stats.compute_time += time.monotonic() - t0
+        seq, n_req = self._serve_batch(params, msgs)
         self.stats.messages += len(msgs)
+        self.stats.items += n_req * self.gen_tokens
         self.stats.batches += 1
+        self._submit(seq, t0=t0)
         return params
+
+    def generate_tokens(self, params, msgs) -> np.ndarray:
+        """Greedy tokens for a message batch: (n_req, gen_tokens) int32.
+        Convenience/inspection path; ``process`` is the streaming hot path."""
+        seq, n_req = self._serve_batch(params, msgs)
+        return np.asarray(seq[:, :n_req, 0]).T
+
+    @property
+    def compiles(self) -> int:
+        return compile_count(self._generate)
 
 
 PROCESSORS = {

@@ -1,3 +1,11 @@
+from repro.streaming.dispatch import (
+    AsyncWindow,
+    LatencyWindow,
+    ShapeBuckets,
+    compile_count,
+    kernel_interpret,
+    pad_rows,
+)
 from repro.streaming.rate_control import PIDRateController
 from repro.streaming.windows import (
     SessionWindow,
@@ -7,9 +15,15 @@ from repro.streaming.windows import (
 )
 
 __all__ = [
+    "AsyncWindow",
+    "LatencyWindow",
     "PIDRateController",
     "SessionWindow",
+    "ShapeBuckets",
     "SlidingWindow",
     "TumblingWindow",
     "WatermarkTracker",
+    "compile_count",
+    "kernel_interpret",
+    "pad_rows",
 ]
