@@ -1,88 +1,66 @@
-"""Closed-loop elastic streaming pipeline (paper §4.2, Fig. 8).
+"""Closed-loop elastic streaming pipeline (paper §4.2, Fig. 8) — declarative.
 
-MASS source -> broker pilot -> micro-batch pilot, with the new
-``repro.elastic`` control plane on top: the stream publishes lag and
-throughput to a MetricsBus, a threshold policy watches it, and the
-ElasticController grows the pilot with an extension pilot when the producer
-rate doubles — then shrinks back once the burst passes.
+Same scenario as before (MASS burst overloads a micro-batch stage, the
+threshold policy grows the pilot, then shrinks once the burst passes), but
+the ~80 lines of hand-wiring are now one spec: ``repro.pipeline`` provisions
+broker + engine pilots, wires the MetricsBus and ElasticController, and
+tears everything down on exit.
 
     PYTHONPATH=src python examples/elastic_pipeline.py
 """
 import time
 
-import numpy as np
-
-from repro.core import PilotComputeService
-from repro.elastic import (
-    ElasticConfig,
-    ElasticController,
-    MetricsBus,
-    ThresholdHysteresisPolicy,
-)
-from repro.miniapps import RateStepScenario, SourceConfig, StreamSource
+from repro.miniapps import StreamSource
+from repro.pipeline import Pipeline, register_processor, register_source
 
 
+@register_source("points16")
 class PointSource(StreamSource):
     def make_message(self, rng, i):
         return rng.normal(size=(16,))
 
 
-svc = PilotComputeService(devices=list(range(8)))
-bus = MetricsBus()
+@register_processor("slow_count")
+class SlowCount:
+    """Data-parallel stage: per-message cost shrinks as devices are added;
+    on_rescale re-reads the device count (the paper's resharding hook)."""
 
-cluster = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"}).get_context()
-cluster.create_topic("points", 4)
-engine = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": 2, "type": "spark"})
-ctx = engine.get_context()
+    def __init__(self):
+        self.devices, self.count = 2, 0
 
-# a data-parallel stage: per-message cost shrinks as devices are added, and
-# on_rescale re-reads the device count (the paper's resharding hook)
-capacity = {"n": 2}
+    def process(self, state, msgs):
+        time.sleep(len(msgs) * 0.01 / self.devices)
+        self.count += len(msgs)
+        return self.count
 
-def process(state, msgs):
-    time.sleep(len(msgs) * 0.01 / capacity["n"])
-    return (state or 0) + len(msgs)
+    def on_rescale(self, devices):
+        self.devices = max(len(devices), 1)
+        return self.count
 
-stream = ctx.stream(cluster, "points", group="elastic", process_fn=process,
-                    batch_interval=0.05, max_batch_records=32,
-                    backpressure=False, metrics=bus)
-stream.on_rescale = lambda devices: (capacity.update(n=max(len(devices), 1)),
-                                     stream.state)[1]
 
-controller = ElasticController(
-    svc, engine, bus,
-    ThresholdHysteresisPolicy(high_lag=80, low_lag=15, up_stable=2, down_stable=3),
-    config=ElasticConfig(interval=0.1, min_devices=2, max_devices=6,
-                         devices_per_step=2, cooldown=1.2),
-    lag_probe=lambda: sum(stream.lag().values()),
-)
+pipe = (Pipeline.named("elastic-demo")
+        .topic("points", partitions=4)
+        .source("points", kind="points16", rate_msgs_per_s=60,
+                rate_schedule=[(1.0, 60), (5.0, 300), (5.0, 40)])
+        .stage("work", topic="points", processor="slow_count", cores_per_node=2,
+               batch_interval=0.05, max_batch_records=32, backpressure=False)
+        .elastic("work", policy="threshold", high_lag=80, low_lag=15,
+                 up_stable=2, down_stable=3, interval=0.1, cooldown=1.2,
+                 min_devices=2, max_devices=6, devices_per_step=2)
+        .build())
 
-source = PointSource(cluster, SourceConfig("points", rate_msgs_per_s=60))
-burst = RateStepScenario(source, [(1.0, 60), (5.0, 300), (5.0, 40)])
-
-stream.start()
-source.start()
-controller.start()
-burst.start()
-
-t0 = time.monotonic()
-while not (burst.finished and controller.devices == 2):
-    lag = sum(stream.lag().values())
-    print(f"t={time.monotonic() - t0:5.1f}s  rate={source.config.rate_msgs_per_s or 0:5.0f}/s  "
-          f"lag={lag:4.0f}  devices={controller.devices}")
-    if time.monotonic() - t0 > 30:
-        break
-    time.sleep(0.5)
-
-burst.stop()
-source.stop()
-controller.shutdown()
-stream.stop()
-svc.cancel()
-
-ups, downs = controller.events.of("scale_up"), controller.events.of("scale_down")
-print(f"\nprocessed {stream.stats.records} records in {stream.stats.batches} batches")
-for e in list(ups) + list(downs):
-    print(f"  {e.action}: {e.devices_before} -> {e.devices_after} devices ({e.reason})")
-assert ups and downs, "expected the burst to trigger a scale-up and a scale-down"
+with pipe.run(devices=8) as run:
+    ctl, t0 = run.controller("work"), time.monotonic()
+    while not (run.scenario("points").finished and ctl.devices == 2):
+        print(f"t={time.monotonic() - t0:5.1f}s  lag={run.lag('work'):4.0f}  "
+              f"devices={ctl.devices}")
+        if time.monotonic() - t0 > 30:
+            break
+        time.sleep(0.5)
+    ups, downs = ctl.events.of("scale_up"), ctl.events.of("scale_down")
+    stats = run.stream("work").stats
+    print(f"\nprocessed {stats.records} records in {stats.batches} batches")
+    for e in list(ups) + list(downs):
+        print(f"  {e.action}: {e.devices_before} -> {e.devices_after} devices ({e.reason})")
+    assert ups and downs, "expected the burst to trigger a scale-up and a scale-down"
 print("elastic pipeline OK")

@@ -1,64 +1,47 @@
-"""Quickstart — the paper's Listings 2-6 in one script.
+"""Quickstart — the paper's Listings 2-6 through the declarative API.
 
-Provision a broker ("kafka") and a processing engine ("spark") through the
-Pilot API, stream data through a topic, run an interoperable Compute-Unit,
-and extend a running cluster.
+One spec declares broker ("kafka"), topic, source and a micro-batch
+("spark") stage; ``run()`` provisions the pilots and wires the streams.
+The imperative Pilot API is still there underneath — the tail of the
+script uses it for a framework-agnostic Compute-Unit (Listing 5) and a
+runtime cluster extension (Listing 4).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+from repro.core import PilotComputeDescription
+from repro.pipeline import Pipeline
 
-from repro.core import PilotComputeService, PilotComputeDescription
-
-svc = PilotComputeService()
-
-# -- Listing 2/3: create a broker cluster ------------------------------------
-pilot_compute_description = {
-    "resource": "local://localhost",
-    "working_directory": "/tmp/pilot-streaming",
-    "number_of_nodes": 2,
-    "type": "kafka",
-}
-kafka_pilot = svc.submit_pilot(pilot_compute_description)
-cluster = kafka_pilot.get_context()  # Listing 6: native client
-cluster.create_topic("numbers", n_partitions=4)
-print(f"broker up: {cluster.n_nodes} nodes, startup {kafka_pilot.startup_time:.3f}s")
-
-# -- produce / consume --------------------------------------------------------
-from repro.broker import Producer
-
-producer = Producer(cluster, "numbers", serializer="npy")
-for i in range(32):
-    producer.send(np.arange(8) + i)
-
-# -- a micro-batch ("spark") engine processing the stream ----------------------
-spark_pilot = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"})
-ctx = spark_pilot.get_context()
 
 def running_sum(state, msgs):
     return (state or 0.0) + float(sum(m.value.sum() for m in msgs))
 
-stream = ctx.stream(cluster, "numbers", group="quickstart", process_fn=running_sum,
-                    batch_interval=0.05).start()
-stream.await_batches(1, timeout=10)
-stream.stop()
-print(f"stream processed {stream.stats.records} messages, state={stream.state}")
 
-# -- Listing 5: framework-agnostic Compute-Unit --------------------------------
-dask_pilot = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": 2, "type": "dask"})
+pipe = (Pipeline.named("quickstart")
+        .broker(nodes=2)
+        .topic("numbers", partitions=4)
+        .source("numbers", kind="static", rate_msgs_per_s=400,
+                total_messages=32, dim=8, points_per_msg=1)
+        .stage("sum", topic="numbers", processor=running_sum,
+               batch_interval=0.05)
+        .build())
 
-def compute(x):
-    return x * x
+with pipe.run(devices=4) as run:
+    cluster = run.cluster  # Listing 6: native client, same object as before
+    print(f"broker up: {cluster.n_nodes} nodes")
+    run.await_batches("sum", 1, timeout=10)
+    stream = run.stream("sum")
+    print(f"stream processed {stream.stats.records} messages, state={stream.state}")
 
-compute_unit = dask_pilot.submit(compute, 2)
-print("CU result:", compute_unit.wait(10))
+    # -- Listing 5: framework-agnostic Compute-Unit on a dask pilot ----------
+    dask_pilot = run.service.submit_pilot(
+        {"number_of_nodes": 1, "cores_per_node": 2, "type": "dask"})
+    print("CU result:", dask_pilot.submit(lambda x: x * x, 2).wait(10))
 
-# -- Listing 4: extend the broker at runtime ------------------------------------
-ext = svc.submit_pilot(PilotComputeDescription(number_of_nodes=2, framework="kafka",
-                                               parent=kafka_pilot))
-print(f"broker extended to {cluster.n_nodes} nodes")
-ext.cancel()
-print(f"broker shrunk back to {cluster.n_nodes} nodes")
+    # -- Listing 4: extend the broker at runtime -----------------------------
+    ext = run.service.submit_pilot(PilotComputeDescription(
+        number_of_nodes=2, framework="kafka", parent=run.broker_pilot))
+    print(f"broker extended to {cluster.n_nodes} nodes")
+    ext.cancel()
+    print(f"broker shrunk back to {cluster.n_nodes} nodes")
 
-svc.cancel()
 print("quickstart OK")

@@ -1,44 +1,43 @@
-"""Streaming K-Means (paper §5/§6.4): MASS cluster source -> broker -> MASA.
-
-Shows model convergence (inertia drops) and PID backpressure keeping the
-pipeline balanced.
+"""Streaming K-Means (paper §5/§6.4): MASS cluster source -> broker -> MASA,
+declared as one pipeline spec. The "kmeans" processor and "cluster" source
+are the built-in Mini-Apps, referenced by name.
 
     PYTHONPATH=src python examples/streaming_kmeans.py
 """
-import numpy as np
-
-from repro.core import PilotComputeService
-from repro.miniapps import KMeansClusterSource, SourceConfig, StreamingKMeans
-
-svc = PilotComputeService()
-cluster = svc.submit_pilot({"number_of_nodes": 2, "type": "kafka"}).get_context()
-cluster.create_topic("points", 8)
-ctx = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"}).get_context()
-
-source = KMeansClusterSource(
-    cluster,
-    SourceConfig("points", total_messages=40, n_producers=4, rate_msgs_per_s=200),
-    n_clusters=10, dim=3, points_per_msg=2000,
-)
-app = StreamingKMeans(n_clusters=10, dim=3, decay=0.7)
+from repro.miniapps import StreamingKMeans
+from repro.pipeline import Pipeline, register_processor
 
 inertias = []
 
-def process(state, msgs):
-    state = app.process(state, msgs)
-    inertias.append(app.inertia)
-    return state
 
-stream = ctx.stream(cluster, "points", group="kmeans", process_fn=process,
-                    batch_interval=0.05, max_batch_records=4).start()
-source.start()
-stream.await_batches(10, timeout=60)
-stream.stop()
-source.stop()
+@register_processor("kmeans_traced")
+class TracedKMeans(StreamingKMeans):
+    """The built-in MASA app, recording inertia per batch for the
+    convergence check below."""
+
+    def process(self, state, msgs):
+        state = super().process(state, msgs)
+        inertias.append(self.inertia)
+        return state
+
+
+pipe = (Pipeline.named("streaming-kmeans")
+        .broker(nodes=2)
+        .topic("points", partitions=8)
+        .source("points", kind="cluster", rate_msgs_per_s=200,
+                total_messages=40, n_producers=4,
+                n_clusters=10, dim=3, points_per_msg=2000)
+        .stage("cluster", topic="points", processor="kmeans_traced",
+               batch_interval=0.05, max_batch_records=4,
+               n_clusters=10, dim=3, decay=0.7)
+        .build())
+
+with pipe.run(devices=4) as run:
+    run.await_batches("cluster", 10, timeout=60)
+    app, stream = run.processor("cluster"), run.stream("cluster")
 
 print(f"batches: {stream.stats.batches}, points: {app.stats.items}")
 print("inertia trajectory:", " -> ".join(f"{x:.1f}" for x in inertias[:10]))
 print(f"throughput: {app.stats.msgs_per_sec:.1f} msgs/s (compute-side)")
 assert inertias[-1] < inertias[0], "centroids should improve with streaming updates"
-svc.cancel()
 print("streaming kmeans OK")

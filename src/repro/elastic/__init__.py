@@ -18,6 +18,7 @@ from repro.elastic.metrics import (
 from repro.elastic.policy import (
     HOLD,
     BinPackingPolicy,
+    LatencyPolicy,
     PIDScalingPolicy,
     ScalingDecision,
     ScalingPolicy,
@@ -33,6 +34,7 @@ __all__ = [
     "ElasticController",
     "EventLog",
     "HOLD",
+    "LatencyPolicy",
     "MetricsBus",
     "MetricsSnapshot",
     "PIDScalingPolicy",

@@ -47,6 +47,7 @@ class ElasticController:
         config: ElasticConfig | None = None,
         lag_probe: Callable[[], float] | None = None,
         probes: dict[str, Callable[[], float]] | None = None,
+        stream: str | None = None,
     ):
         self.service = service
         self.pilot = pilot  # base pilot; extensions hang off it
@@ -56,6 +57,9 @@ class ElasticController:
         #: published to ``elastic.lag`` each pass — authoritative when the
         #: engine is too stalled to publish its own ``stream.lag``
         self.lag_probe = lag_probe
+        #: stream label narrowing this controller's snapshot to one stage —
+        #: without it a shared bus mixes every stream's latency/busy gauges
+        self.stream = stream
         self.probes = dict(probes or {})
         self.events = EventLog()
         self.extensions: list = []  # pilots we created, newest last
@@ -86,12 +90,14 @@ class ElasticController:
     def step(self) -> ScalingDecision:
         now = time.monotonic()
         self._ticks += 1
+        labels = {} if self.stream is None else {"stream": self.stream}
         if self.lag_probe is not None:
-            self.bus.publish("elastic.lag", self.lag_probe(), t=now)
+            self.bus.publish("elastic.lag", self.lag_probe(), t=now, **labels)
         for name, fn in self.probes.items():
-            self.bus.publish(name, fn(), t=now)
+            self.bus.publish(name, fn(), t=now, **labels)
         snap = MetricsSnapshot.capture(self.bus, self.service.pool,
-                                       pipeline_devices=self.devices)
+                                       pipeline_devices=self.devices,
+                                       stream=self.stream)
         # gate on cooldown BEFORE consulting the policy: a decision dropped
         # here would consume its hysteresis counters / integral for nothing,
         # adding up_stable*interval of latency after every cooldown collision

@@ -206,11 +206,34 @@ class MetricsSnapshot:
 
     @classmethod
     def capture(cls, bus: MetricsBus, pool: Any | None = None,
-                pipeline_devices: int | None = None) -> "MetricsSnapshot":
+                pipeline_devices: int | None = None,
+                stream: str | None = None) -> "MetricsSnapshot":
         """``pool`` is duck-typed (``DevicePool``): total/leased/utilization
-        are read live when given, else from ``pool.*`` gauges on the bus."""
-        probe_lag = bus.latest("elastic.lag")
-        lag = probe_lag.value if probe_lag is not None else bus.sum_latest("stream.lag")
+        are read live when given, else from ``pool.*`` gauges on the bus.
+
+        ``stream`` narrows the view to one stream label: without it, the
+        latency/busy gauges take the max over ALL streams on the bus, which
+        is wrong for a controller that manages just one stage of a
+        multi-stage pipeline (another stage's saturation would trigger it).
+        """
+
+        def _per_stream(name: str) -> dict[str, float]:
+            vals = bus.latest_by_label(name, "stream")
+            if stream is not None:
+                vals = {k: v for k, v in vals.items() if k == stream}
+            return vals
+
+        # a controller's lag probe is authoritative (fresh even when the
+        # engine is too stalled to publish). Filtered captures look for the
+        # probe sample labeled with their stream; unfiltered ones take any.
+        if stream is None:
+            probe_lag = bus.latest("elastic.lag")
+        else:
+            probe_lag = bus.latest("elastic.lag", stream=stream)
+        if probe_lag is not None:
+            lag = probe_lag.value
+        else:
+            lag = sum(_per_stream("stream.lag").values())
         if pool is not None:
             total = pool.total_devices
             leased = pool.leased_devices
@@ -219,23 +242,28 @@ class MetricsSnapshot:
             total = int(bus.value("pool.devices_total"))
             leased = int(bus.value("pool.devices_leased"))
             util = bus.value("pool.utilization")
-        busy = 0.0
-        for _, v in bus.latest_by_label("stream.busy_frac", "stream").items():
-            busy = max(busy, v)
-        p50 = max(bus.latest_by_label("stream.latency_p50", "stream").values(), default=0.0)
-        p99 = max(bus.latest_by_label("stream.latency_p99", "stream").values(), default=0.0)
+        busy = max(_per_stream("stream.busy_frac").values(), default=0.0)
+        p50 = max(_per_stream("stream.latency_p50").values(), default=0.0)
+        p99 = max(_per_stream("stream.latency_p99").values(), default=0.0)
+        demands = _per_stream("stream.records_per_sec")
+        if stream is None:
+            proc_delay = bus.value("stream.processing_delay")
+            sched_delay = bus.value("stream.scheduling_delay")
+        else:
+            proc_delay = _per_stream("stream.processing_delay").get(stream, 0.0)
+            sched_delay = _per_stream("stream.scheduling_delay").get(stream, 0.0)
         return cls(
             t=time.monotonic(),
             lag=lag,
-            records_per_sec=bus.sum_latest("stream.records_per_sec"),
-            processing_delay=bus.value("stream.processing_delay"),
-            scheduling_delay=bus.value("stream.scheduling_delay"),
+            records_per_sec=sum(demands.values()),
+            processing_delay=proc_delay,
+            scheduling_delay=sched_delay,
             busy_frac=busy,
             devices_total=total,
             devices_leased=leased,
             utilization=util,
             pipeline_devices=leased if pipeline_devices is None else pipeline_devices,
-            stage_demands=bus.latest_by_label("stream.records_per_sec", "stream"),
+            stage_demands=demands,
             latency_p50=p50,
             latency_p99=p99,
         )

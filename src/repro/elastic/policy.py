@@ -137,6 +137,65 @@ class PIDScalingPolicy(ScalingPolicy):
         return ScalingDecision(delta, f"pid u={u:.2f} lag={snap.lag:.0f}")
 
 
+@dataclass
+class LatencyPolicy(ScalingPolicy):
+    """React to per-batch compute-latency quantiles *before* they surface as
+    lag (ROADMAP "make a scaling policy actually consume latency_p50/p99").
+
+    A micro-batch pipeline saturates when batch compute time approaches the
+    batch interval: at ``p99 >= up_frac * batch_interval`` the stream is about
+    to fall behind even if lag still reads low, so scale up. Scale down only
+    when the *median* is comfortably below ``down_frac * batch_interval`` AND
+    lag is drained — p50 is used for the down leg so one slow straggler batch
+    (a p99 artifact) cannot hold surplus devices forever. Both legs require
+    consecutive observations, mirroring :class:`ThresholdHysteresisPolicy`.
+    """
+
+    batch_interval: float
+    up_frac: float = 0.8
+    down_frac: float = 0.3
+    max_lag_for_down: float = 10.0
+    up_stable: int = 2
+    down_stable: int = 3
+    step: int = 1
+
+    _above: int = field(default=0, repr=False)
+    _below: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.batch_interval <= 0:
+            raise ValueError("batch_interval must be positive")
+
+    def decide(self, snap: MetricsSnapshot) -> ScalingDecision:
+        high = self.up_frac * self.batch_interval
+        low = self.down_frac * self.batch_interval
+        if snap.latency_p99 >= high:
+            self._above += 1
+            self._below = 0
+        elif (
+            0.0 < snap.latency_p50 <= low and snap.lag <= self.max_lag_for_down
+        ):
+            self._below += 1
+            self._above = 0
+        else:
+            self._above = self._below = 0
+        if self._above >= self.up_stable:
+            self._above = 0
+            return ScalingDecision(
+                self.step,
+                f"p99 {snap.latency_p99 * 1e3:.0f}ms >= {high * 1e3:.0f}ms "
+                f"({self.up_frac:.0%} of batch interval)",
+            )
+        if self._below >= self.down_stable:
+            self._below = 0
+            return ScalingDecision(
+                -self.step,
+                f"p50 {snap.latency_p50 * 1e3:.0f}ms <= {low * 1e3:.0f}ms, "
+                f"lag {snap.lag:.0f}",
+            )
+        return HOLD
+
+
 def first_fit_decreasing(items: dict[str, float], capacity: float) -> list[list[str]]:
     """Pack named demands into the fewest ``capacity``-sized bins (FFD).
 

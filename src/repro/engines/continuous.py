@@ -36,6 +36,8 @@ class ContinuousStream:
         allowed_lateness: float = 0.0,
         emit: Callable[[Any], None] | None = None,
         metrics: MetricsBus | None = None,
+        on_rescale: Callable[[Any], Any] | None = None,
+        metrics_label: str | None = None,
     ):
         self.cluster = cluster
         self.topic = topic
@@ -48,6 +50,10 @@ class ContinuousStream:
         self.watermarks = WatermarkTracker(allowed_lateness)
         self.stats = ContinuousStats()
         self.metrics = metrics
+        #: bus label (defaults to topic; see MicroBatchStream.metrics_label)
+        self.metrics_label = metrics_label or topic
+        # resharding hook, constructor kwarg or post-hoc attribute (both work)
+        self.on_rescale: Callable[[Any], Any] | None = on_rescale
         self._buffers: dict[tuple, list] = defaultdict(list)  # (key, window) -> msgs
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -113,12 +119,13 @@ class ContinuousStream:
         if now - self._last_publish < 0.5:
             return
         self._last_publish = now
-        self.metrics.publish("stream.records_per_sec", 0.0, stream=self.topic)
+        self.metrics.publish("stream.records_per_sec", 0.0, stream=self.metrics_label)
         self.metrics.publish("stream.lag", sum(
-            self.cluster.lag(self.group.group, self.topic).values()), stream=self.topic)
+            self.cluster.lag(self.group.group, self.topic).values()),
+            stream=self.metrics_label)
 
     def _publish(self, n: int, dt: float) -> None:
-        bus, labels = self.metrics, {"stream": self.topic}
+        bus, labels = self.metrics, {"stream": self.metrics_label}
         self._last_publish = time.monotonic()
         bus.publish("stream.records", self.stats.records, **labels)
         bus.publish("stream.records_per_sec", n / dt if dt > 0 else 0.0, **labels)
@@ -150,6 +157,19 @@ class ContinuousStream:
         if self._error:
             raise self._error
 
+    def lag(self) -> dict[int, int]:
+        """Records behind per partition (same shape as the micro-batch
+        stream's) — what autoscaler lag probes consume."""
+        return self.cluster.lag(self.group.group, self.topic)
+
+    def rescale(self, devices: list) -> None:
+        """Notify the processor of a changed device set (extension pilots
+        added/removed). The continuous engine keeps window state host-side,
+        so unlike the micro-batch engine there is no engine-held state to
+        swap — the hook's return value is ignored."""
+        if self.on_rescale is not None:
+            self.on_rescale(devices)
+
 
 @register_plugin("continuous")
 @register_plugin("flink")  # paper naming convenience
@@ -171,11 +191,17 @@ class ContinuousPlugin(ManagerPlugin):
 
     def extend(self, lease: Lease) -> None:
         self.devices.extend(lease.devices)
+        self._rescale()
 
     def shrink(self, lease: Lease) -> None:
         for d in lease.devices:
             if d in self.devices:
                 self.devices.remove(d)
+        self._rescale()
+
+    def _rescale(self) -> None:
+        for s in self.streams:
+            s.rescale(self.devices)
 
     def get_context(self, configuration: dict | None = None) -> "ContinuousPlugin":
         return self

@@ -47,6 +47,8 @@ class MicroBatchStream:
         deserialize: bool = True,
         metrics: MetricsBus | None = None,
         sync_fn: Callable[[], None] | None = None,
+        on_rescale: Callable[[Any], Any] | None = None,
+        metrics_label: str | None = None,
     ):
         self.cluster = cluster
         self.topic = topic
@@ -71,7 +73,13 @@ class MicroBatchStream:
         self.latency = LatencyWindow()
         self._processor = owner
         self.metrics = metrics
-        self.on_rescale: Callable[[Any], Any] | None = None
+        #: bus label for this stream's gauges. Defaults to the topic; two
+        #: stages consuming one topic need distinct labels (the declarative
+        #: runner passes topic/group) or they overwrite each other's gauges
+        self.metrics_label = metrics_label or topic
+        # the resharding hook may be given at construction or assigned to
+        # the attribute afterwards (both supported)
+        self.on_rescale: Callable[[Any], Any] | None = on_rescale
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._batch_id = 0
@@ -151,13 +159,13 @@ class MicroBatchStream:
         if now - self._last_publish < self.batch_interval:
             return
         self._last_publish = now
-        labels = {"stream": self.topic}
+        labels = {"stream": self.metrics_label}
         self.metrics.publish("stream.records_per_sec", 0.0, **labels)
         self.metrics.publish("stream.busy_frac", 0.0, **labels)
         self.metrics.publish("stream.lag", sum(self.lag().values()), **labels)
 
     def _publish_batch(self, n: int, dt: float, scheduling_delay: float) -> None:
-        bus, labels = self.metrics, {"stream": self.topic}
+        bus, labels = self.metrics, {"stream": self.metrics_label}
         self._last_publish = time.monotonic()
         bus.publish("stream.records", self.stats.records, **labels)
         bus.publish("stream.records_per_sec", n / dt if dt > 0 else 0.0, **labels)

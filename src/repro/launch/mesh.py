@@ -14,11 +14,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """Single pod: 16x16 ("data","model"). Multi-pod: 2x16x16 ("pod","data","model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # Auto axis semantics are the jax.make_mesh default; the pinned jax
+    # (0.4.37) predates the explicit jax.sharding.AxisType API.
+    return jax.make_mesh(shape, axes)
 
 
 def make_local_mesh(n_model: int = 1, n_data: int | None = None) -> Mesh:

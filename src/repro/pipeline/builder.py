@@ -1,0 +1,314 @@
+"""Fluent pipeline builder — compose, then validate, then get a frozen spec.
+
+    pipe = (Pipeline.named("kmeans")
+            .broker(nodes=2)
+            .topic("points", partitions=8)
+            .source("points", kind="cluster", rate_msgs_per_s=200,
+                    n_clusters=10, dim=3)
+            .stage("score", topic="points", processor="kmeans",
+                   cores_per_node=2, batch_interval=0.05,
+                   n_clusters=10, dim=3)
+            .elastic("score", policy="threshold", high_lag=80, low_lag=15)
+            .build())
+    with pipe.run(devices=8) as run:
+        run.await_batches("score", 10)
+
+Validation happens in :meth:`Pipeline.build` — unknown topics, duplicate
+names, topic cycles, unknown processors/sources/policies, engine/knob
+mismatches — so misconfigurations fail before any pilot is provisioned,
+not minutes into a run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.pipeline import registry
+from repro.pipeline.spec import (
+    BrokerSpec,
+    ElasticSpec,
+    PipelineSpec,
+    SinkSpec,
+    SourceSpec,
+    StageSpec,
+)
+
+_STAGE_FIELDS = {
+    "engine", "nodes", "cores_per_node", "group", "output_topic", "emits",
+    "batch_interval", "max_batch_records", "backpressure", "window",
+}
+_SOURCE_FIELDS = {
+    "rate_msgs_per_s", "total_messages", "n_producers", "seed", "rate_schedule",
+}
+_ENGINES = {"microbatch", "continuous"}
+_WINDOWS = {"tumbling", "sliding", "session"}
+
+
+class PipelineValidationError(ValueError):
+    """Raised by :meth:`Pipeline.build` with every problem found (not just
+    the first)."""
+
+    def __init__(self, errors: list[str]):
+        self.errors = list(errors)
+        super().__init__(
+            "invalid pipeline:\n" + "\n".join(f"  - {e}" for e in errors)
+        )
+
+
+class Pipeline:
+    """Mutable accumulator behind the fluent API; ``build()`` returns the
+    immutable :class:`PipelineSpec`."""
+
+    def __init__(self, name: str):
+        self._name = name
+        self._broker = BrokerSpec()
+        self._topics: dict[str, int] = {}
+        self._sources: list[SourceSpec] = []
+        self._stages: list[StageSpec] = []
+        self._sinks: list[SinkSpec] = []
+        self._elastic: dict[str, ElasticSpec] = {}
+
+    @classmethod
+    def named(cls, name: str) -> "Pipeline":
+        return cls(name)
+
+    # -- broker ---------------------------------------------------------------
+
+    def broker(self, *, nodes: int = 1, framework: str = "kafka",
+               io_rate_per_node: float | None = None) -> "Pipeline":
+        self._broker = BrokerSpec(nodes=nodes, framework=framework,
+                                  io_rate_per_node=io_rate_per_node)
+        return self
+
+    def topic(self, name: str, partitions: int = 4) -> "Pipeline":
+        self._topics[name] = partitions
+        return self
+
+    # -- components -----------------------------------------------------------
+
+    def source(self, topic: str, *, kind: str = "cluster", **kw) -> "Pipeline":
+        """Attach a producer group to ``topic``. Keyword args split between
+        :class:`SourceSpec` fields and factory ``options``."""
+        spec_kw = {k: kw.pop(k) for k in list(kw) if k in _SOURCE_FIELDS}
+        self._sources.append(
+            SourceSpec(topic=topic, kind=kind, options=kw, **spec_kw)
+        )
+        return self
+
+    def stage(self, name: str, *, topic: str,
+              processor: str | Callable[..., Any], **kw) -> "Pipeline":
+        """Add a processing stage consuming ``topic``. ``processor`` is a
+        registry name or a callable (auto-registered under its
+        ``__name__``). Remaining kwargs split between :class:`StageSpec`
+        fields and processor ``options``."""
+        if callable(processor):
+            # qualify with the defining module so two pipelines' same-named
+            # local functions cannot silently overwrite each other
+            ref = f"{processor.__module__}.{processor.__qualname__}"
+            registry.register_processor(ref, processor)
+            processor = ref
+        spec_kw = {k: kw.pop(k) for k in list(kw) if k in _STAGE_FIELDS}
+        self._stages.append(
+            StageSpec(name=name, topic=topic, processor=processor,
+                      options=kw, **spec_kw)
+        )
+        return self
+
+    def sink(self, name: str, *, topic: str,
+             fn: str | Callable | None = None, **options) -> "Pipeline":
+        """Drain ``topic``: collect messages (default) or apply ``fn`` per
+        message (a registry name or callable)."""
+        kind = "collect"
+        if fn is not None:
+            if callable(fn):
+                ref = f"{fn.__module__}.{fn.__qualname__}"
+                registry.register_sink(ref, fn)
+                fn = ref
+            kind = fn
+        self._sinks.append(SinkSpec(name=name, topic=topic, kind=kind,
+                                    options=options))
+        return self
+
+    def elastic(self, stage: str, *, policy: str = "threshold",
+                interval: float = 0.5, min_devices: int = 1,
+                max_devices: int | None = None, devices_per_step: int = 1,
+                cooldown: float = 1.0, **params) -> "Pipeline":
+        """Make ``stage`` elastic: ``policy`` + ``params`` select/configure
+        the ScalingPolicy, the rest configure the controller."""
+        self._elastic[stage] = ElasticSpec(
+            policy=policy, params=params, interval=interval,
+            min_devices=min_devices, max_devices=max_devices,
+            devices_per_step=devices_per_step, cooldown=cooldown,
+        )
+        return self
+
+    # -- finalize -------------------------------------------------------------
+
+    def build(self) -> PipelineSpec:
+        errors = self._validate()
+        if errors:
+            raise PipelineValidationError(errors)
+        stages = tuple(
+            s if s.name not in self._elastic
+            else StageSpec(**{**_stage_kwargs(s), "elastic": self._elastic[s.name]})
+            for s in self._stages
+        )
+        broker = BrokerSpec(
+            nodes=self._broker.nodes,
+            framework=self._broker.framework,
+            topics=dict(self._topics),
+            io_rate_per_node=self._broker.io_rate_per_node,
+        )
+        return PipelineSpec(
+            name=self._name,
+            broker=broker,
+            sources=tuple(self._sources),
+            stages=stages,
+            sinks=tuple(self._sinks),
+        )
+
+    def _validate(self) -> list[str]:
+        errors: list[str] = []
+        if not self._name:
+            errors.append("pipeline needs a non-empty name")
+        if self._broker.nodes < 1:
+            errors.append(f"broker needs >= 1 node, got {self._broker.nodes}")
+        for name, parts in self._topics.items():
+            if parts < 1:
+                errors.append(f"topic {name!r} needs >= 1 partition, got {parts}")
+
+        seen_stage: set[str] = set()
+        for s in self._stages:
+            if s.name in seen_stage:
+                errors.append(f"duplicate stage name {s.name!r}")
+            seen_stage.add(s.name)
+            if s.topic not in self._topics:
+                errors.append(f"stage {s.name!r} consumes unknown topic {s.topic!r}")
+            if s.output_topic is not None and s.output_topic not in self._topics:
+                errors.append(
+                    f"stage {s.name!r} emits to unknown topic {s.output_topic!r}"
+                )
+            if s.output_topic == s.topic:
+                errors.append(
+                    f"stage {s.name!r} reads and writes topic {s.topic!r} "
+                    "(self-loop)"
+                )
+            if s.engine not in _ENGINES:
+                errors.append(
+                    f"stage {s.name!r}: unknown engine {s.engine!r} "
+                    f"(expected one of {sorted(_ENGINES)})"
+                )
+            if s.engine == "continuous":
+                w = s.window.get("window", "tumbling")
+                if w not in _WINDOWS:
+                    errors.append(
+                        f"stage {s.name!r}: unknown window kind {w!r} "
+                        f"(expected one of {sorted(_WINDOWS)})"
+                    )
+                if s.emits:
+                    errors.append(
+                        f"stage {s.name!r}: emits=True requires the "
+                        "micro-batch engine"
+                    )
+            elif s.window:
+                errors.append(
+                    f"stage {s.name!r}: window options only apply to the "
+                    "continuous engine"
+                )
+            if s.emits and s.output_topic is None:
+                errors.append(f"stage {s.name!r}: emits=True needs output_topic")
+            if s.output_topic is not None and not s.emits:
+                errors.append(
+                    f"stage {s.name!r}: output_topic needs emits=True "
+                    "(processor must return (state, outputs))"
+                )
+            if s.processor not in registry.known_processors():
+                errors.append(f"stage {s.name!r}: unknown processor {s.processor!r}")
+
+        errors.extend(self._cycle_errors())
+
+        for src in self._sources:
+            if src.topic not in self._topics:
+                errors.append(f"source feeds unknown topic {src.topic!r}")
+            if src.kind not in registry.known_sources():
+                errors.append(f"unknown source kind {src.kind!r}")
+            if src.n_producers < 1:
+                errors.append(
+                    f"source on {src.topic!r} needs >= 1 producer, got "
+                    f"{src.n_producers}"
+                )
+
+        seen_sink: set[str] = set()
+        for sk in self._sinks:
+            if sk.name in seen_sink:
+                errors.append(f"duplicate sink name {sk.name!r}")
+            seen_sink.add(sk.name)
+            if sk.topic not in self._topics:
+                errors.append(f"sink {sk.name!r} drains unknown topic {sk.topic!r}")
+            if sk.kind != "collect" and sk.kind not in registry.known_sinks():
+                errors.append(f"sink {sk.name!r}: unknown sink fn {sk.kind!r}")
+
+        by_name = {s.name: s for s in self._stages}
+        for stage_name, el in self._elastic.items():
+            if stage_name not in by_name:
+                errors.append(f"elastic policy attached to unknown stage {stage_name!r}")
+            try:
+                cls = registry.resolve_policy(el.policy)
+            except KeyError as e:
+                errors.append(str(e.args[0]))
+                continue
+            params = dict(el.params)
+            if el.policy == "latency" and stage_name in by_name:
+                # the continuous engine never publishes latency_p50/p99, so a
+                # latency policy on it would silently hold forever
+                if by_name[stage_name].engine == "continuous":
+                    errors.append(
+                        f"elastic policy 'latency' on {stage_name!r}: the "
+                        "continuous engine publishes no latency quantiles; "
+                        "use a lag-based policy (threshold/pid/binpack)"
+                    )
+                    continue
+                # the runner injects the stage's batch interval the same way
+                params.setdefault("batch_interval", by_name[stage_name].batch_interval)
+            try:
+                cls(**params)
+            except (TypeError, ValueError) as e:
+                errors.append(f"elastic policy {el.policy!r} on {stage_name!r}: {e}")
+        return errors
+
+    def _cycle_errors(self) -> list[str]:
+        """Topic-level DFS: stage edges topic -> output_topic must be acyclic."""
+        edges: dict[str, list[str]] = {}
+        for s in self._stages:
+            if s.output_topic is not None:
+                edges.setdefault(s.topic, []).append(s.output_topic)
+        state: dict[str, int] = {}  # 0 visiting, 1 done
+
+        def visit(t: str, path: tuple) -> list[str]:
+            if state.get(t) == 1:
+                return []
+            if state.get(t) == 0:
+                cyc = path[path.index(t):] + (t,)
+                return [f"topic cycle: {' -> '.join(cyc)}"]
+            state[t] = 0
+            errs = []
+            for nxt in edges.get(t, ()):
+                errs += visit(nxt, path + (t,))
+            state[t] = 1
+            return errs
+
+        errs: list[str] = []
+        for t in list(edges):
+            errs += visit(t, ())
+        return errs
+
+
+def _stage_kwargs(s: StageSpec) -> dict:
+    return {
+        "name": s.name, "topic": s.topic, "processor": s.processor,
+        "engine": s.engine, "nodes": s.nodes, "cores_per_node": s.cores_per_node,
+        "group": s.group, "output_topic": s.output_topic, "emits": s.emits,
+        "batch_interval": s.batch_interval,
+        "max_batch_records": s.max_batch_records,
+        "backpressure": s.backpressure, "window": dict(s.window),
+        "options": dict(s.options),
+    }

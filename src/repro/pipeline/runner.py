@@ -1,0 +1,343 @@
+"""PipelineRun — one call from spec to a live, elastic pipeline.
+
+Implements the declarative layer purely on top of the imperative API
+(``PilotComputeService`` / engine plugins / ``repro.elastic``): nothing the
+runner does is impossible by hand, it just encodes the ordering and wiring
+that every hand-written example used to repeat.
+
+Start order (dependencies first)::
+
+    service -> broker pilot -> topics -> engine pilots -> sinks
+            -> streams -> controllers -> sources -> rate scenarios
+
+Teardown runs the exact reverse, even when ``start()`` fails half-way or a
+stage dies mid-run: every component is pushed onto a stack as it comes up,
+and ``stop()`` pops the stack, recording (not raising) per-component
+errors so one wedged component cannot leak the pilots behind it.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+from repro.broker.consumer import Consumer, ConsumerGroup
+from repro.broker.producer import Producer
+from repro.core import PilotComputeService
+from repro.elastic import ElasticConfig, ElasticController, MetricsBus
+from repro.pipeline import registry
+from repro.pipeline.spec import PipelineSpec, SinkSpec, StageSpec
+from repro.streaming.windows import SessionWindow, SlidingWindow, TumblingWindow
+
+
+class SinkRunner:
+    """Terminal consumer: drains a topic, applying a fn or collecting."""
+
+    def __init__(self, spec: SinkSpec, cluster, fn: Callable | None):
+        self.spec = spec
+        self.items: list = []
+        self._fn = fn
+        group = ConsumerGroup(cluster, f"sink-{spec.name}", spec.topic)
+        self._consumer = Consumer(cluster, group, member_id=f"sink-{spec.name}")
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.error: BaseException | None = None
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                msgs = self._consumer.poll(max_records=256, timeout=0.05)
+                for m in msgs:
+                    if self._fn is not None:
+                        self._fn(m)
+                    else:
+                        self.items.append(m.value)
+                if msgs:
+                    self._consumer.commit()
+            except BaseException as e:
+                self.error = e
+                return
+
+    def start(self) -> "SinkRunner":
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        if self.error is not None:  # surfaced into PipelineRun.errors
+            raise self.error
+
+
+def _make_assigner(window: dict):
+    kind = window.get("window", "tumbling")
+    if kind == "tumbling":
+        return TumblingWindow(window.get("size", 1.0))
+    if kind == "sliding":
+        return SlidingWindow(window.get("size", 1.0), window.get("slide", 0.5))
+    return SessionWindow(window.get("gap", 1.0))
+
+
+class PipelineRun:
+    """Context manager around one provisioned pipeline.
+
+    ``with spec.run(devices=8) as run:`` starts everything; leaving the
+    block (or calling :meth:`stop`, which is idempotent) tears down in
+    reverse order. Pass an existing ``service`` to share a device pool with
+    other pipelines; the run then only cancels the pilots *it* created.
+    """
+
+    def __init__(self, spec: PipelineSpec, *, service: PilotComputeService | None = None,
+                 devices: int | list | None = None, bus: MetricsBus | None = None):
+        self.spec = spec
+        self.bus = bus or MetricsBus()
+        self._own_service = service is None
+        if service is None:
+            devs = list(range(devices)) if isinstance(devices, int) else devices
+            service = PilotComputeService(devices=devs, metrics=self.bus)
+        self.service = service
+        self.cluster = None
+        self._streams: dict[str, Any] = {}
+        self._pilots: dict[str, Any] = {}
+        self._controllers: dict[str, ElasticController] = {}
+        self._sources: dict[str, list] = {}  # topic -> sources, spec order
+        self._scenarios: dict[str, list] = {}
+        self._sinks: dict[str, SinkRunner] = {}
+        self._processors: dict[str, Any] = {}
+        #: LIFO of (label, stop_callable) — teardown pops from the end
+        self._teardown: list[tuple[str, Callable[[], None]]] = []
+        #: labels in the order components were torn down (tests assert this)
+        self.teardown_log: list[str] = []
+        #: component errors collected during stop() — never raised there
+        self.errors: list[BaseException] = []
+        self._started = False
+        self._stopped = False
+        self._lock = threading.Lock()
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self) -> "PipelineRun":
+        if self._started:
+            return self
+        self._started = True
+        try:
+            self._provision()
+        except BaseException:
+            # unwind whatever came up before the failure, then re-raise
+            self.stop()
+            raise
+        return self
+
+    def __enter__(self) -> "PipelineRun":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()
+
+    def stop(self) -> None:
+        """Reverse-order teardown; safe to call twice (second call no-ops)."""
+        with self._lock:
+            if self._stopped:
+                return
+            self._stopped = True
+            steps, self._teardown = list(self._teardown), []
+        for label, fn in reversed(steps):
+            try:
+                fn()
+            except BaseException as e:
+                self.errors.append(e)
+            finally:
+                self.teardown_log.append(label)
+
+    # -- provisioning (start order = spec dependency order) --------------------
+
+    def _push(self, label: str, stop_fn: Callable[[], None]) -> None:
+        self._teardown.append((label, stop_fn))
+
+    def _provision(self) -> None:
+        spec = self.spec
+        if self._own_service:
+            self._push("service", self.service.cancel)
+
+        broker_pilot = self.service.submit_pilot({
+            "number_of_nodes": spec.broker.nodes,
+            "type": spec.broker.framework,
+            "io_rate_per_node": spec.broker.io_rate_per_node,
+        })
+        self._pilots["__broker__"] = broker_pilot
+        if not self._own_service:
+            self._push("broker", broker_pilot.cancel)
+        self.cluster = broker_pilot.get_context()
+        for topic, parts in spec.broker.topics.items():
+            self.cluster.create_topic(topic, parts)
+
+        for stage in spec.stages:
+            self._provision_stage(stage)
+
+        for sink in spec.sinks:
+            fn = None if sink.kind == "collect" else registry.resolve_sink(sink.kind)
+            runner = SinkRunner(sink, self.cluster, fn)
+            self._sinks[sink.name] = runner
+            runner.start()
+            self._push(f"sink:{sink.name}", runner.stop)
+
+        for stage in spec.stages:
+            stream = self._streams[stage.name]
+            stream.start()
+            self._push(f"stream:{stage.name}", stream.stop)
+
+        for stage in spec.stages:
+            if stage.elastic is not None:
+                ctl = self._make_controller(stage)
+                self._controllers[stage.name] = ctl
+                ctl.start()
+                self._push(f"controller:{stage.name}", ctl.shutdown)
+
+        for src_spec in spec.sources:
+            source, scenario = self._make_source(src_spec)
+            self._sources.setdefault(src_spec.topic, []).append(source)
+            source.start()
+            self._push(f"source:{src_spec.topic}", source.stop)
+            if scenario is not None:
+                self._scenarios.setdefault(src_spec.topic, []).append(scenario)
+                scenario.start()
+                self._push(f"scenario:{src_spec.topic}", scenario.stop)
+
+    def _provision_stage(self, stage: StageSpec) -> None:
+        framework = "spark" if stage.engine == "microbatch" else "flink"
+        pilot = self.service.submit_pilot({
+            "number_of_nodes": stage.nodes,
+            "cores_per_node": stage.cores_per_node,
+            "type": framework,
+        })
+        self._pilots[stage.name] = pilot
+        if not self._own_service:
+            self._push(f"pilot:{stage.name}", pilot.cancel)
+        ctx = pilot.get_context()
+        proc = registry.make_processor(stage.processor, dict(stage.options))
+        self._processors[stage.name] = proc
+        # topic alone is ambiguous when two stages consume the same topic;
+        # label this stage's gauges (and its controller's scope) uniquely
+        label = f"{stage.topic}/{stage.consumer_group}"
+
+        if stage.engine == "microbatch":
+            process_fn = proc.process if hasattr(proc, "process") else proc
+            on_rescale = getattr(proc, "on_rescale", None)
+            sync_fn = getattr(proc, "sync", None)
+            if stage.emits:
+                process_fn = self._emitting(process_fn, stage.output_topic)
+            stream = ctx.stream(
+                self.cluster, stage.topic,
+                group=stage.consumer_group,
+                process_fn=process_fn,
+                batch_interval=stage.batch_interval,
+                max_batch_records=stage.max_batch_records,
+                backpressure=stage.backpressure,
+                metrics=self.bus,
+                sync_fn=sync_fn,
+                on_rescale=on_rescale,
+                metrics_label=label,
+            )
+        else:
+            window_fn = proc.process if hasattr(proc, "process") else proc
+            stream = ctx.stream(
+                self.cluster, stage.topic,
+                group=stage.consumer_group,
+                assigner=_make_assigner(stage.window),
+                window_fn=window_fn,
+                allowed_lateness=stage.window.get("allowed_lateness", 0.0),
+                metrics=self.bus,
+                on_rescale=getattr(proc, "on_rescale", None),
+                metrics_label=label,
+            )
+        self._streams[stage.name] = stream
+
+    def _emitting(self, fn: Callable, topic: str) -> Callable:
+        """Wrap a ``(state, msgs) -> (state, outputs)`` processor so outputs
+        land on the stage's output topic."""
+        producer = Producer(self.cluster, topic, serializer="npy")
+
+        def wrapped(state, msgs):
+            state, outs = fn(state, msgs)
+            for out in outs or ():
+                producer.send(out)
+            return state
+
+        return wrapped
+
+    def _make_controller(self, stage: StageSpec) -> ElasticController:
+        el = stage.elastic
+        params = dict(el.params)
+        if el.policy == "latency":
+            params.setdefault("batch_interval", stage.batch_interval)
+        policy = registry.resolve_policy(el.policy)(**params)
+        stream = self._streams[stage.name]
+        return ElasticController(
+            self.service, self._pilots[stage.name], self.bus, policy,
+            config=ElasticConfig(
+                interval=el.interval, min_devices=el.min_devices,
+                max_devices=el.max_devices,
+                devices_per_step=el.devices_per_step, cooldown=el.cooldown,
+            ),
+            lag_probe=lambda: sum(stream.lag().values()),
+            # scope the controller's snapshot to this stage's stream gauges
+            # (the bus is shared by every stage in the pipeline)
+            stream=stream.metrics_label,
+        )
+
+    def _make_source(self, src) -> tuple:
+        from repro.miniapps import RateStepScenario, SourceConfig
+
+        factory = registry.resolve_source(src.kind)
+        config = SourceConfig(
+            src.topic, rate_msgs_per_s=src.rate_msgs_per_s,
+            total_messages=src.total_messages, n_producers=src.n_producers,
+            seed=src.seed,
+        )
+        source = factory(self.cluster, config, **dict(src.options))
+        scenario = None
+        if src.rate_schedule:
+            scenario = RateStepScenario(source, [tuple(s) for s in src.rate_schedule])
+        return source, scenario
+
+    # -- accessors ------------------------------------------------------------
+
+    def stream(self, stage: str):
+        return self._streams[stage]
+
+    def processor(self, stage: str):
+        return self._processors[stage]
+
+    def controller(self, stage: str) -> ElasticController:
+        return self._controllers[stage]
+
+    def source(self, topic: str, index: int = 0):
+        """The ``index``-th source feeding ``topic`` (spec order) — a topic
+        may have several producer groups."""
+        return self._sources[topic][index]
+
+    def scenario(self, topic: str, index: int = 0):
+        return self._scenarios[topic][index]
+
+    def sink(self, name: str) -> SinkRunner:
+        return self._sinks[name]
+
+    def pilot(self, stage: str):
+        return self._pilots[stage]
+
+    @property
+    def broker_pilot(self):
+        """The broker's pilot — parent for manual extension pilots
+        (paper Listing 4)."""
+        return self._pilots["__broker__"]
+
+    def await_batches(self, stage: str, n: int, timeout: float = 60.0) -> None:
+        self._streams[stage].await_batches(n, timeout=timeout)
+
+    def await_windows(self, stage: str, n: int, timeout: float = 30.0) -> None:
+        self._streams[stage].await_windows(n, timeout=timeout)
+
+    def lag(self, stage: str) -> float:
+        return float(sum(self._streams[stage].lag().values()))

@@ -1,0 +1,228 @@
+"""Declarative pipeline topology — the paper's composition pitch made data.
+
+A :class:`PipelineSpec` is a frozen, JSON-serializable description of one
+streaming pipeline: broker sizing, topics, sources, processing stages
+(micro-batch or continuous) chained topic -> topic, sinks, and per-stage
+elasticity policy. It describes *what* to run; the builder
+(:mod:`repro.pipeline.builder`) checks it, and the runner
+(:mod:`repro.pipeline.runner`) turns it into pilots, streams and
+controllers through the existing imperative API.
+
+Callables (custom processors, sources, sinks) are referenced by *name*
+through :mod:`repro.pipeline.registry`, so a spec round-trips losslessly:
+``PipelineSpec.from_dict(spec.to_dict()) == spec``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, fields, replace
+from typing import Any, Mapping
+
+
+def _freeze_options(opts: Mapping[str, Any] | None) -> dict:
+    """Shallow-copy option mappings so frozen specs don't alias caller dicts."""
+    return dict(opts or {})
+
+
+@dataclass(frozen=True)
+class BrokerSpec:
+    """The broker pilot: node count and topic layout."""
+
+    nodes: int = 1
+    framework: str = "kafka"
+    #: topic name -> partition count
+    topics: dict = field(default_factory=dict)
+    #: per-node byte-rate budget (None = unlimited), paper's 1-broker bottleneck
+    io_rate_per_node: float | None = None
+
+
+@dataclass(frozen=True)
+class SourceSpec:
+    """One MASS-style producer group feeding a topic.
+
+    ``kind`` names a factory in the source registry — the built-in
+    ``repro.miniapps.SOURCES`` kinds ("cluster", "static", "lightsource",
+    "tokens") plus anything registered via ``repro.pipeline.register_source``.
+    """
+
+    topic: str
+    kind: str = "cluster"
+    rate_msgs_per_s: float | None = None
+    total_messages: int | None = None
+    n_producers: int = 1
+    seed: int = 0
+    #: factory kwargs beyond SourceConfig (e.g. n_clusters, dim)
+    options: dict = field(default_factory=dict)
+    #: optional [(duration_s, rate), ...] driven by a RateStepScenario
+    rate_schedule: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "options", _freeze_options(self.options))
+        object.__setattr__(
+            self, "rate_schedule", tuple(tuple(s) for s in self.rate_schedule)
+        )
+
+
+@dataclass(frozen=True)
+class ElasticSpec:
+    """Per-stage elasticity: which policy watches the bus, and the
+    controller's clamps. ``policy`` is one of POLICIES in
+    :mod:`repro.pipeline.registry` ("threshold", "pid", "binpack",
+    "latency"); ``params`` are the policy's constructor kwargs."""
+
+    policy: str = "threshold"
+    params: dict = field(default_factory=dict)
+    interval: float = 0.5
+    min_devices: int = 1
+    max_devices: int | None = None
+    devices_per_step: int = 1
+    cooldown: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "params", _freeze_options(self.params))
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    """One processing stage: engine pilot + stream consuming ``topic``.
+
+    ``processor`` names a factory in the processor registry — the built-in
+    ``repro.miniapps.PROCESSORS`` ("kmeans", "gridrec", "mlem", "lm_train",
+    "lm_serve") or anything registered via
+    ``repro.pipeline.register_processor`` (including plain
+    ``(state, msgs) -> state`` functions). When ``emits`` is true the
+    processor returns ``(state, outputs)`` and outputs are produced to
+    ``output_topic``.
+    """
+
+    name: str
+    topic: str
+    processor: str
+    engine: str = "microbatch"  # "microbatch" | "continuous"
+    nodes: int = 1
+    cores_per_node: int = 1
+    group: str | None = None  # consumer group (default: stage name)
+    output_topic: str | None = None
+    emits: bool = False
+    # micro-batch knobs
+    batch_interval: float = 0.5
+    max_batch_records: int = 4096
+    backpressure: bool = True
+    # continuous knobs: {"window": "tumbling"|"sliding"|"session", "size": s,
+    # "slide": s, "gap": s, "allowed_lateness": s}
+    window: dict = field(default_factory=dict)
+    #: processor factory kwargs
+    options: dict = field(default_factory=dict)
+    elastic: ElasticSpec | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "options", _freeze_options(self.options))
+        object.__setattr__(self, "window", _freeze_options(self.window))
+
+    @property
+    def consumer_group(self) -> str:
+        return self.group or self.name
+
+
+@dataclass(frozen=True)
+class SinkSpec:
+    """A terminal consumer draining ``topic``. ``kind`` is "collect"
+    (records kept on ``PipelineRun.sink(name).items``) or a registered
+    sink callable applied per message."""
+
+    name: str
+    topic: str
+    kind: str = "collect"
+    options: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "options", _freeze_options(self.options))
+
+
+@dataclass(frozen=True)
+class PipelineSpec:
+    """The whole topology. Construct via the fluent builder
+    (``Pipeline.named(...)``) which validates before instantiating."""
+
+    name: str
+    broker: BrokerSpec = field(default_factory=BrokerSpec)
+    sources: tuple = ()
+    stages: tuple = ()
+    sinks: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "sources", tuple(self.sources))
+        object.__setattr__(self, "stages", tuple(self.stages))
+        object.__setattr__(self, "sinks", tuple(self.sinks))
+
+    # -- accessors ------------------------------------------------------------
+
+    def stage(self, name: str) -> StageSpec:
+        for s in self.stages:
+            if s.name == name:
+                return s
+        raise KeyError(f"no stage named {name!r}")
+
+    @property
+    def topics(self) -> dict:
+        return dict(self.broker.topics)
+
+    # -- serde ---------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return _to_dict(self)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, **kw)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PipelineSpec":
+        d = dict(d)
+        broker = BrokerSpec(**d.pop("broker", {}))
+        sources = tuple(SourceSpec(**s) for s in d.pop("sources", ()))
+        stages = []
+        for s in d.pop("stages", ()):
+            s = dict(s)
+            el = s.pop("elastic", None)
+            stages.append(
+                StageSpec(**s, elastic=ElasticSpec(**el) if el is not None else None)
+            )
+        sinks = tuple(SinkSpec(**s) for s in d.pop("sinks", ()))
+        return cls(broker=broker, sources=sources, stages=tuple(stages),
+                   sinks=sinks, **d)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PipelineSpec":
+        return cls.from_dict(json.loads(text))
+
+    # -- runner entry point ---------------------------------------------------
+
+    def run(self, **kw):
+        """Provision and start the pipeline; see
+        :class:`repro.pipeline.runner.PipelineRun`."""
+        from repro.pipeline.runner import PipelineRun
+
+        return PipelineRun(self, **kw)
+
+
+def _to_dict(obj: Any) -> Any:
+    """Dataclass -> plain JSON-able structures (tuples become lists)."""
+    if hasattr(obj, "__dataclass_fields__"):
+        out = {}
+        for f in fields(obj):
+            v = getattr(obj, f.name)
+            if v is None and f.name == "elastic":
+                out[f.name] = None
+            else:
+                out[f.name] = _to_dict(v)
+        return out
+    if isinstance(obj, (list, tuple)):
+        return [_to_dict(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: _to_dict(v) for k, v in obj.items()}
+    return obj
+
+
+def with_elastic(stage: StageSpec, elastic: ElasticSpec) -> StageSpec:
+    """Frozen-friendly update used by the builder."""
+    return replace(stage, elastic=elastic)

@@ -159,10 +159,25 @@ def _operand_names(rest: str) -> list[str]:
             continue
         if depth >= 1:
             cur += ch
+    # split on commas outside []/{} — operands may carry an inline type
+    # ("f32[32,128]{1,0} %copy.10", older HLO text) whose dims also use commas
+    parts, cur, bdepth = [], "", 0
+    for ch in "".join(out):
+        if ch in "[{":
+            bdepth += 1
+        elif ch in "]}":
+            bdepth -= 1
+        if ch == "," and bdepth == 0:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    parts.append(cur)
     names = []
-    for part in "".join(out).split(","):
+    for part in parts:
         part = part.strip()
-        pm = re.match(r"%?([\w\.\-]+)", part)
+        # with an inline type the name is the last token; bare names stand alone
+        pm = re.search(r"%?([\w\.\-]+)$", part)
         if pm:
             names.append(pm.group(1))
     return names

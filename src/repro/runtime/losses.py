@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from repro.utils.jax_compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -49,7 +50,7 @@ def vocab_parallel_embed(tokens: jax.Array, embed: jax.Array, rules) -> jax.Arra
             return jax.lax.psum_scatter(x, "model", scatter_dimension=1, tiled=True)
         return jax.lax.psum(x, "model")
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(bspec, seq_axis), P("model", None)),
@@ -94,8 +95,7 @@ def vocab_parallel_cross_entropy(
         mc = mg.reshape(B_l, n_chunks, cs).swapaxes(0, 1)
         hT = hl.astype(xl.dtype).T  # (D, vshard)
 
-        def step(carry, inp):
-            xi, ti, mi = inp
+        def step(xi, ti, mi):
             logits = (xi @ hT).astype(jnp.float32)  # (B_l, cs, vshard)
             # stabilization constant only -> gradients cancel exactly
             lmax = jax.lax.stop_gradient(
@@ -108,22 +108,28 @@ def vocab_parallel_cross_entropy(
             safe = jnp.clip(t_loc, 0, vshard - 1)
             picked_loc = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
             picked = jax.lax.psum(jnp.where(in_range, picked_loc, 0.0), "model")
-            nll = (lse - picked) * mi
-            return (carry[0] + nll.sum(), carry[1] + mi.sum()), None
+            return ((lse - picked) * mi).sum()
 
-        (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), (xc, tc, mc))
-        # reduce over batch shards -> replicated scalars
+        # chunk count is static, so a Python loop works where lax.scan does
+        # not: the pre-promotion shard_map cannot transpose a scan inside the
+        # mapped body (its scalar carry residual breaks the spec check)
+        tot = jnp.float32(0.0)
+        for c in range(n_chunks):
+            tot = tot + step(xc[c], tc[c], mc[c])
+        # reduce over batch shards -> replicated scalar
         axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
         if axes:
             tot = jax.lax.psum(tot, axes)
-            cnt = jax.lax.psum(cnt, axes)
-        return tot, cnt
+        return tot
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(bspec, "model", None), P("model", None), P(bspec, "model"), P(bspec, "model")),
-        out_specs=(P(), P()),
+        out_specs=P(),
         check_vma=False,
     )
-    return fn(x, head, targets, mask)
+    # the mask count needs no sharded compute, and keeping the mapped fn
+    # single-output sidesteps a pre-promotion shard_map transpose bug when
+    # several outputs carry nonzero cotangents (e.g. loss = tot / cnt)
+    return fn(x, head, targets, mask), mask.astype(jnp.float32).sum()

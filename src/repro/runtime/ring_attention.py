@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from repro.utils.jax_compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 NEG_INF = -1e30
@@ -74,7 +75,7 @@ def ring_attention_shmap(q, k, v, rules, *, causal: bool, block_kv: int, scale: 
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return out.transpose(0, 3, 1, 2, 4).reshape(ql.shape[0], S_l, H, hd).astype(vl.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec, check_vma=False
     )
     return fn(q, k, v)

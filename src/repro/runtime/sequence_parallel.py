@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from repro.utils.jax_compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -76,7 +77,7 @@ def wkv6_sharded(r, k, v, w, u, rules, *, chunk: int = 32):
         S_final = jax.lax.psum(S_final * last, "model")
         return out, S_final
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(spec, spec, spec, spec, P(None, None)),
@@ -117,7 +118,7 @@ def conv1d_sharded(x, w, b, rules):
         out = sum(xp[:, j : j + T_l] * wl[j][None, None] for j in range(K)) + bl[None, None]
         return jax.nn.silu(out)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(spec, P(None, None), P(None)),
@@ -172,7 +173,7 @@ def ssd_sharded(x, dt, A, B, C, D, rules, *, chunk: int = 64):
         S_final = jax.lax.psum(S_final * last, "model")
         return y, S_final
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(x_spec, dt_spec, bc_spec, bc_spec),

@@ -20,6 +20,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from repro.utils.jax_compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 NEG_INF = -1e30
@@ -254,7 +255,7 @@ def sharded_attention(q, k, v, rules, *, causal: bool, block_kv: int = 512, impl
             )
         return out.reshape(ql.shape[0], Sq, H, hd)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(qkv_spec, qkv_spec, qkv_spec),

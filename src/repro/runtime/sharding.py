@@ -97,6 +97,9 @@ class ShardingRules:
             entries = self._apply_zero(entries, axes, shape, used)
         while entries and entries[-1] is None:
             entries.pop()
+        # 1-tuples mean the same partitioning as their bare axis name, but the
+        # pinned jax's PartitionSpec compares them unequal — normalize
+        entries = [e[0] if isinstance(e, tuple) and len(e) == 1 else e for e in entries]
         return P(*entries)
 
     def _apply_zero(self, entries, axes, shape, used) -> list:

@@ -1,0 +1,28 @@
+"""Version shims for the pinned jax (0.4.37).
+
+The runtime modules were written against the promoted ``jax.shard_map``
+API; 0.4.37 still carries it as ``jax.experimental.shard_map.shard_map``
+with the replication check named ``check_rep`` instead of ``check_vma``.
+Everything else (specs, collectives) is call-compatible, so one thin
+wrapper keeps the call sites on the modern spelling.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+                  check_vma: bool = True) -> Callable:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+                  check_vma: bool = True) -> Callable:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -48,15 +48,16 @@ def test_compressed_pod_reduction_lowers_with_s8_collectives(subproc):
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.runtime.grad_compress import quantized_psum, resid_len
+from repro.utils.jax_compat import shard_map
 
-mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((2,), ("pod",))
 
 def step(g, r):
     # per-pod partials enter with a leading pod dim; exchange inside shard_map
     def local(g, r):
         red, nr = quantized_psum(g[0], r[0], "pod")
         return red[None], nr[None]
-    return jax.shard_map(local, mesh=mesh, in_specs=(P("pod"), P("pod")),
+    return shard_map(local, mesh=mesh, in_specs=(P("pod"), P("pod")),
                          out_specs=(P(None), P("pod")), check_vma=False)(g, r)
 
 g = jnp.stack([jnp.ones((4, 256)) * 0.5, jnp.ones((4, 256)) * 0.25])
@@ -84,7 +85,7 @@ def test_compressed_dp_training_converges(subproc):
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 
-mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((2,), ("pod",))
 key = jax.random.key(0)
 Xw = jax.random.normal(key, (64, 16))
 y = Xw @ jax.random.normal(jax.random.key(1), (16,))
@@ -93,6 +94,7 @@ def loss_fn(w, X, y):
     return jnp.mean((X @ w - y) ** 2)
 
 from repro.runtime.grad_compress import quantized_psum, resid_len
+from repro.utils.jax_compat import shard_map
 
 def make_step(compressed):
     def step(w, resid, X, y):
@@ -102,7 +104,7 @@ def make_step(compressed):
                 red, nr = quantized_psum(g, r[0], "pod")
                 return red, nr[None]
             return jax.lax.psum(g, "pod"), r
-        g, resid = jax.shard_map(per_pod, mesh=mesh,
+        g, resid = shard_map(per_pod, mesh=mesh,
                                  in_specs=(P("pod"), P("pod"), P("pod")),
                                  out_specs=(P(None), P("pod")), check_vma=False)(X, y, resid)
         return w - 0.05 * g, resid

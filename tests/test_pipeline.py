@@ -1,0 +1,517 @@
+"""Declarative pipeline API: spec serde, builder validation, run lifecycle.
+
+The lifecycle tests drive real (in-process) pilots through small pipelines
+and assert the runner's ordering guarantees: reverse-order teardown even
+when a stage dies mid-run or provisioning fails half-way, and idempotent
+``stop()``.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.elastic import LatencyPolicy, MetricsSnapshot
+from repro.pipeline import (
+    Pipeline,
+    PipelineSpec,
+    PipelineValidationError,
+    register_processor,
+    register_source,
+)
+from repro.miniapps import StreamSource
+
+
+# ---------------------------------------------------------------------------
+# fixtures: tiny source + processors
+# ---------------------------------------------------------------------------
+
+
+@register_source("vec8")
+class _Vec8Source(StreamSource):
+    def make_message(self, rng, i):
+        return rng.normal(size=(8,))
+
+
+@register_processor("count_msgs")
+def _count(state, msgs):
+    return (state or 0) + len(msgs)
+
+
+def _tiny(name="t", **stage_kw):
+    return (Pipeline.named(name)
+            .topic("in", partitions=2)
+            .source("in", kind="vec8", rate_msgs_per_s=400, total_messages=64)
+            .stage("s", topic="in", processor="count_msgs",
+                   batch_interval=0.05, backpressure=False, **stage_kw)
+            .build())
+
+
+# ---------------------------------------------------------------------------
+# spec serde
+# ---------------------------------------------------------------------------
+
+
+def test_spec_round_trips_dict_and_json():
+    spec = (Pipeline.named("rt")
+            .broker(nodes=2, io_rate_per_node=1e6)
+            .topic("a", partitions=4).topic("b", partitions=2)
+            .source("a", kind="cluster", rate_msgs_per_s=100, n_producers=2,
+                    rate_schedule=[(1.0, 100), (2.0, 300)],
+                    n_clusters=4, dim=3)
+            .stage("first", topic="a", processor="kmeans", cores_per_node=2,
+                   emits=True, output_topic="b", n_clusters=4, dim=3)
+            .stage("second", topic="b", processor="count_msgs",
+                   engine="continuous", window={"window": "tumbling", "size": 0.5})
+            .sink("drain", topic="b")
+            .elastic("first", policy="latency", up_frac=0.7, interval=0.2)
+            .build())
+    assert PipelineSpec.from_dict(spec.to_dict()) == spec
+    assert PipelineSpec.from_json(spec.to_json()) == spec
+    # the dict form is genuinely plain data (JSON survives a full cycle)
+    import json
+
+    assert json.loads(spec.to_json()) == spec.to_dict()
+
+
+def test_spec_is_frozen_and_does_not_alias_caller_dicts():
+    opts = {"n_clusters": 4}
+    spec = (Pipeline.named("fz").topic("a")
+            .stage("s", topic="a", processor="kmeans", **opts).build())
+    opts["n_clusters"] = 99
+    assert spec.stage("s").options["n_clusters"] == 4
+    with pytest.raises(AttributeError):
+        spec.stage("s").topic = "other"
+
+
+# ---------------------------------------------------------------------------
+# builder validation
+# ---------------------------------------------------------------------------
+
+
+def test_builder_collects_all_errors():
+    with pytest.raises(PipelineValidationError) as ei:
+        (Pipeline.named("bad")
+         .topic("a").topic("b")
+         .stage("s1", topic="ghost", processor="nope", engine="weird")
+         .stage("s1", topic="a", processor="count_msgs")
+         .elastic("missing", policy="alien")
+         .build())
+    text = str(ei.value)
+    for frag in ("unknown topic 'ghost'", "unknown processor 'nope'",
+                 "unknown engine 'weird'", "duplicate stage name 's1'",
+                 "unknown stage 'missing'", "unknown elastic policy 'alien'"):
+        assert frag in text, f"missing {frag!r} in:\n{text}"
+
+
+def test_builder_rejects_topic_cycles_and_emit_mismatches():
+    with pytest.raises(PipelineValidationError) as ei:
+        (Pipeline.named("cyc")
+         .topic("a").topic("b")
+         .stage("f", topic="a", processor="count_msgs", emits=True, output_topic="b")
+         .stage("g", topic="b", processor="count_msgs", emits=True, output_topic="a")
+         .build())
+    assert "topic cycle" in str(ei.value)
+    with pytest.raises(PipelineValidationError) as ei:
+        (Pipeline.named("em").topic("a").topic("b")
+         .stage("f", topic="a", processor="count_msgs", output_topic="b")
+         .build())
+    assert "needs emits=True" in str(ei.value)
+
+
+def test_builder_validates_policy_params_at_build_time():
+    with pytest.raises(PipelineValidationError) as ei:
+        (Pipeline.named("pp").topic("a")
+         .stage("s", topic="a", processor="count_msgs")
+         .elastic("s", policy="threshold")  # high_lag/low_lag missing
+         .build())
+    assert "high_lag" in str(ei.value)
+    # latency policy needs no explicit batch_interval: injected from the stage
+    spec = (Pipeline.named("lat").topic("a")
+            .stage("s", topic="a", processor="count_msgs", batch_interval=0.2)
+            .elastic("s", policy="latency")
+            .build())
+    assert spec.stage("s").elastic.policy == "latency"
+
+
+# ---------------------------------------------------------------------------
+# run lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_run_processes_and_tears_down_in_reverse_order():
+    spec = _tiny("lifecycle")
+    with spec.run(devices=2) as run:
+        run.await_batches("s", 1, timeout=20)
+        assert run.stream("s").stats.records > 0
+    assert run.errors == []
+    # teardown is the exact reverse of start order
+    assert run.teardown_log == ["source:in", "stream:s", "service"]
+    # the run's pilots are gone and the pool is whole again
+    assert run.service.pool.leased_devices == 0
+    assert run.service.pilots == []
+
+
+def test_run_stop_is_idempotent():
+    spec = _tiny("double-stop")
+    run = spec.run(devices=2).start()
+    run.await_batches("s", 1, timeout=20)
+    run.stop()
+    log_after_first = list(run.teardown_log)
+    run.stop()  # second stop must be a no-op, not a re-teardown
+    assert run.teardown_log == log_after_first
+    assert run.errors == []
+
+
+def test_run_teardown_order_survives_mid_run_stage_failure():
+    @register_processor("explode_after_2")
+    class Exploding:
+        def __init__(self):
+            self.batches = 0
+
+        def process(self, state, msgs):
+            self.batches += 1
+            if self.batches > 2:
+                raise RuntimeError("stage blew up mid-run")
+            return (state or 0) + len(msgs)
+
+    spec = (Pipeline.named("boom")
+            .topic("in", partitions=2)
+            .source("in", kind="vec8", rate_msgs_per_s=400)
+            .stage("s", topic="in", processor="explode_after_2",
+                   batch_interval=0.05, backpressure=False)
+            .build())
+    with spec.run(devices=2) as run:
+        deadline = time.monotonic() + 20
+        while time.monotonic() < deadline and run.stream("s")._error is None:
+            time.sleep(0.05)
+        assert run.stream("s")._error is not None
+    # the dead stage's error is collected at teardown, not raised, and the
+    # components behind it (source first, service last) still came down
+    assert run.teardown_log == ["source:in", "stream:s", "service"]
+    assert any("stage blew up" in str(e) for e in run.errors)
+    assert run.service.pool.leased_devices == 0
+
+
+def test_run_unwinds_when_provisioning_fails_half_way():
+    @register_processor("broken_factory")
+    class BrokenFactory:
+        def __init__(self):
+            raise RuntimeError("cannot construct processor")
+
+    spec = (Pipeline.named("halfway")
+            .topic("in", partitions=2)
+            .source("in", kind="vec8", rate_msgs_per_s=100)
+            .stage("s", topic="in", processor="broken_factory")
+            .build())
+    run = spec.run(devices=2)
+    with pytest.raises(RuntimeError, match="cannot construct"):
+        run.start()
+    # broker + engine pilots that did come up were released again
+    assert run.service.pool.leased_devices == 0
+    assert run.teardown_log[-1] == "service"
+
+
+def test_run_chains_stages_through_topics_and_sinks():
+    @register_processor("double_vals")
+    def double_vals(state, msgs):
+        return (state or 0) + len(msgs), [np.asarray(m.value) * 2.0 for m in msgs]
+
+    spec = (Pipeline.named("chain")
+            .topic("raw", partitions=2).topic("out", partitions=2)
+            .source("raw", kind="vec8", rate_msgs_per_s=400, total_messages=16)
+            .stage("x2", topic="raw", processor="double_vals",
+                   emits=True, output_topic="out",
+                   batch_interval=0.05, backpressure=False)
+            .sink("collect", topic="out")
+            .build())
+    with spec.run(devices=2) as run:
+        run.await_batches("x2", 1, timeout=20)
+        deadline = time.monotonic() + 20
+        while time.monotonic() < deadline and not run.sink("collect").items:
+            time.sleep(0.05)
+        items = list(run.sink("collect").items)
+    assert items, "sink should observe the doubled stream"
+    assert all(v.shape == (8,) for v in items)
+    assert run.errors == []
+
+
+@pytest.mark.slow
+def test_run_elastic_closed_loop_scales_up_and_down():
+    """The examples/elastic_pipeline.py scenario, compressed."""
+    capacity = {"n": 2}
+
+    @register_processor("slow_stage")
+    class Slow:
+        def process(self, state, msgs):
+            time.sleep(len(msgs) * 0.01 / capacity["n"])
+            return (state or 0) + len(msgs)
+
+        def on_rescale(self, devices):
+            capacity["n"] = max(len(devices), 1)
+            return None
+
+    spec = (Pipeline.named("elastic")
+            .topic("points", partitions=4)
+            .source("points", kind="vec8", rate_msgs_per_s=60,
+                    rate_schedule=[(0.5, 60), (4.0, 300), (4.0, 40)])
+            .stage("work", topic="points", processor="slow_stage",
+                   cores_per_node=2, batch_interval=0.05,
+                   max_batch_records=32, backpressure=False)
+            .elastic("work", policy="threshold", high_lag=80, low_lag=15,
+                     up_stable=2, down_stable=3, interval=0.1, cooldown=1.0,
+                     min_devices=2, max_devices=6, devices_per_step=2)
+            .build())
+    with spec.run(devices=8) as run:
+        ctl, t0 = run.controller("work"), time.monotonic()
+        while time.monotonic() - t0 < 25:
+            if run.scenario("points").finished and ctl.devices == 2:
+                break
+            time.sleep(0.25)
+        assert ctl.events.of("scale_up"), "burst should trigger a scale-up"
+        assert ctl.events.of("scale_down"), "drain should trigger a scale-down"
+    assert run.teardown_log[-1] == "service"
+    assert run.service.pool.leased_devices == 0
+
+
+def test_run_surfaces_sink_errors_at_teardown():
+    from repro.pipeline import register_sink
+
+    @register_sink("explode_sink")
+    def explode_sink(msg):
+        raise RuntimeError("sink blew up")
+
+    spec = (Pipeline.named("sinkboom")
+            .topic("in", partitions=1)
+            .source("in", kind="vec8", rate_msgs_per_s=200, total_messages=8)
+            .stage("s", topic="in", processor="count_msgs",
+                   batch_interval=0.05, backpressure=False)
+            .sink("bad", topic="in", fn="explode_sink")
+            .build())
+    with spec.run(devices=2) as run:
+        deadline = time.monotonic() + 20
+        while time.monotonic() < deadline and run.sink("bad").error is None:
+            time.sleep(0.05)
+        assert run.sink("bad").error is not None
+    assert any("sink blew up" in str(e) for e in run.errors)
+
+
+def test_builder_rejects_undeclared_source_and_output_topics():
+    # no silent topic auto-creation: a typo'd source topic must fail build()
+    with pytest.raises(PipelineValidationError, match="unknown topic 'poinst'"):
+        (Pipeline.named("typo").topic("points")
+         .source("poinst", kind="vec8")
+         .stage("s", topic="points", processor="count_msgs")
+         .build())
+    with pytest.raises(PipelineValidationError, match="unknown topic 'owt'"):
+        (Pipeline.named("typo2").topic("a")
+         .stage("s", topic="a", processor="count_msgs", emits=True,
+                output_topic="owt")
+         .build())
+
+
+def test_run_keeps_every_source_on_a_shared_topic():
+    spec = (Pipeline.named("twosrc")
+            .topic("in", partitions=2)
+            .source("in", kind="vec8", rate_msgs_per_s=100, total_messages=4, seed=1)
+            .source("in", kind="vec8", rate_msgs_per_s=100, total_messages=4, seed=2)
+            .stage("s", topic="in", processor="count_msgs",
+                   batch_interval=0.05, backpressure=False)
+            .build())
+    with spec.run(devices=2) as run:
+        assert run.source("in", 0) is not run.source("in", 1)
+        run.await_batches("s", 1, timeout=20)
+
+
+def test_snapshot_capture_scoped_to_one_stream():
+    """A controller watching stage A must not see stage B's gauges."""
+    from repro.elastic import MetricsBus
+
+    bus = MetricsBus()
+    bus.publish("stream.latency_p99", 0.45, stream="b")
+    bus.publish("stream.latency_p99", 0.005, stream="a")
+    bus.publish("stream.busy_frac", 0.9, stream="b")
+    bus.publish("stream.lag", 500, stream="b")
+    bus.publish("stream.lag", 2, stream="a")
+    scoped = MetricsSnapshot.capture(bus, stream="a")
+    assert scoped.latency_p99 == pytest.approx(0.005)
+    assert scoped.busy_frac == 0.0
+    assert scoped.lag == 2
+    # unscoped capture aggregates every stream's lag
+    assert MetricsSnapshot.capture(bus).lag == 502
+    # a labeled probe wins for the matching stream only; stream b still
+    # falls back to its own stream.lag gauge
+    bus.publish("elastic.lag", 7, stream="a")
+    assert MetricsSnapshot.capture(bus, stream="a").lag == 7
+    assert MetricsSnapshot.capture(bus, stream="b").lag == 500
+    # unscoped capture prefers any probe sample (newest across label sets)
+    bus.publish("elastic.lag", 999)
+    assert MetricsSnapshot.capture(bus).lag == 999
+
+
+def test_builder_rejects_latency_policy_on_continuous_stage():
+    with pytest.raises(PipelineValidationError, match="no latency quantiles"):
+        (Pipeline.named("lc").topic("a")
+         .stage("s", topic="a", processor="count_msgs", engine="continuous")
+         .elastic("s", policy="latency")
+         .build())
+
+
+def test_processor_with_defaulted_params_is_not_called_as_factory():
+    @register_processor("defaulted_proc")
+    def defaulted_proc(state, msgs=()):
+        return (state or 0) + len(msgs)
+
+    from repro.pipeline.registry import make_processor
+
+    assert make_processor("defaulted_proc", {}) is defaulted_proc
+
+
+def test_two_stages_on_one_topic_get_distinct_metric_labels():
+    spec = (Pipeline.named("sharedtopic")
+            .topic("in", partitions=2)
+            .source("in", kind="vec8", rate_msgs_per_s=200, total_messages=16)
+            .stage("a", topic="in", processor="count_msgs",
+                   batch_interval=0.05, backpressure=False)
+            .stage("b", topic="in", processor="count_msgs",
+                   batch_interval=0.05, backpressure=False)
+            .build())
+    with spec.run(devices=2) as run:
+        assert run.stream("a").metrics_label != run.stream("b").metrics_label
+        run.await_batches("a", 1, timeout=20)
+        run.await_batches("b", 1, timeout=20)
+        # each stage's gauges live under its own label on the shared bus
+        labels = set(run.bus.latest_by_label("stream.lag", "stream"))
+        assert {"in/a", "in/b"} <= labels
+
+
+def test_elastic_on_continuous_stage_has_a_working_lag_probe():
+    from repro.pipeline import register_processor as _rp
+
+    @_rp("win_count")
+    def win_count(key, window, msgs):
+        return len(msgs)
+
+    spec = (Pipeline.named("contel")
+            .topic("in", partitions=2)
+            .source("in", kind="vec8", rate_msgs_per_s=100, total_messages=8)
+            .stage("s", topic="in", processor="win_count",
+                   engine="continuous", window={"window": "tumbling", "size": 0.2})
+            .elastic("s", policy="threshold", high_lag=1e9, low_lag=0,
+                     interval=0.1)
+            .build())
+    with spec.run(devices=2) as run:
+        ctl = run.controller("s")
+        ctl.step()  # must not raise: ContinuousStream.lag() exists now
+        assert ctl._last_error is None
+        assert run.lag("s") >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# on_rescale constructor kwarg (both engines)
+# ---------------------------------------------------------------------------
+
+
+def test_on_rescale_constructor_kwarg_micro_batch():
+    from repro.core import PilotComputeService
+
+    svc = PilotComputeService(devices=[0, 1])
+    cluster = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"}).get_context()
+    cluster.create_topic("t", 1)
+    pilot = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": 1, "type": "spark"})
+    seen = []
+    stream = pilot.get_context().stream(
+        cluster, "t", group="g", process_fn=lambda s, m: s,
+        on_rescale=lambda devices: (seen.append(list(devices)), "state")[1],
+    )
+    stream.rescale([0, 1])
+    assert seen == [[0, 1]] and stream.state == "state"
+    stream.on_rescale = lambda devices: "reassigned"  # post-hoc still works
+    stream.rescale([0])
+    assert stream.state == "reassigned"
+    svc.cancel()
+
+
+def test_on_rescale_constructor_kwarg_continuous():
+    from repro.core import PilotComputeService
+    from repro.streaming.windows import TumblingWindow
+
+    svc = PilotComputeService(devices=[0, 1])
+    cluster = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"}).get_context()
+    cluster.create_topic("t", 1)
+    pilot = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": 1, "type": "flink"})
+    seen = []
+    pilot.get_context().stream(
+        cluster, "t", group="g", assigner=TumblingWindow(1.0),
+        window_fn=lambda k, w, m: None, on_rescale=seen.append,
+    )
+    # extension pilots fire the hook through the plugin, like micro-batch
+    from repro.core import PilotComputeDescription
+
+    ext = svc.submit_pilot(PilotComputeDescription(
+        number_of_nodes=1, cores_per_node=1, framework="flink", parent=pilot))
+    assert len(seen) == 1 and len(seen[0]) == 2
+    ext.cancel()
+    assert len(seen) == 2 and len(seen[1]) == 1
+    svc.cancel()
+
+
+# ---------------------------------------------------------------------------
+# LatencyPolicy
+# ---------------------------------------------------------------------------
+
+
+def _snap(p50=0.0, p99=0.0, lag=0.0, t=0.0):
+    return MetricsSnapshot(
+        t=t, lag=lag, records_per_sec=0.0, processing_delay=0.0,
+        scheduling_delay=0.0, busy_frac=0.0, devices_total=8,
+        devices_leased=2, utilization=0.25, pipeline_devices=2,
+        latency_p50=p50, latency_p99=p99,
+    )
+
+
+def test_latency_policy_scales_up_when_p99_nears_batch_interval():
+    p = LatencyPolicy(batch_interval=0.1, up_frac=0.8, up_stable=2)
+    assert p.decide(_snap(p50=0.05, p99=0.09)).delta_devices == 0  # 1st obs
+    d = p.decide(_snap(p50=0.05, p99=0.09))
+    assert d.scale_up and d.delta_devices == 1
+    # counter reset after acting
+    assert p.decide(_snap(p50=0.05, p99=0.09)).delta_devices == 0
+
+
+def test_latency_policy_scales_down_on_low_p50_and_drained_lag():
+    p = LatencyPolicy(batch_interval=0.1, down_frac=0.3, down_stable=2,
+                      max_lag_for_down=10)
+    assert p.decide(_snap(p50=0.01, p99=0.02, lag=5)).delta_devices == 0
+    d = p.decide(_snap(p50=0.01, p99=0.02, lag=5))
+    assert d.scale_down
+    # lag not drained -> no scale-down even with low latency
+    p2 = LatencyPolicy(batch_interval=0.1, down_stable=1, max_lag_for_down=10)
+    assert p2.decide(_snap(p50=0.01, p99=0.02, lag=500)).delta_devices == 0
+
+
+def test_latency_policy_holds_between_bands_and_rejects_bad_interval():
+    p = LatencyPolicy(batch_interval=0.1)
+    for _ in range(5):
+        assert p.decide(_snap(p50=0.05, p99=0.05)).delta_devices == 0
+    with pytest.raises(ValueError):
+        LatencyPolicy(batch_interval=0.0)
+
+
+def test_latency_policy_selectable_from_spec_runner():
+    """End-to-end: ElasticSpec(policy="latency") builds a LatencyPolicy with
+    the stage's batch interval injected."""
+    from repro.pipeline.registry import resolve_policy
+
+    cls = resolve_policy("latency")
+    assert cls is LatencyPolicy
+    built = (Pipeline.named("l2").topic("a")
+             .stage("s", topic="a", processor="count_msgs", batch_interval=0.25)
+             .elastic("s", policy="latency", up_frac=0.9)
+             .build())
+    el = built.stage("s").elastic
+    assert el.params == {"up_frac": 0.9}
+    with built.run(devices=2) as run:
+        ctl = run.controller("s")
+        assert isinstance(ctl.policy, LatencyPolicy)
+        assert ctl.policy.batch_interval == 0.25
+        assert ctl.policy.up_frac == 0.9

@@ -9,7 +9,7 @@ from repro.models.rwkv6 import wkv6_chunked
 from repro.runtime.sharding import ShardingRules
 from repro.runtime.sequence_parallel import wkv6_sharded
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 rules = ShardingRules(mesh=mesh, batch_axes=("data",), kind="train")
 B, H, T, N = 2, 3, 64, 16
 ks = jax.random.split(jax.random.key(0), 5)
@@ -49,7 +49,7 @@ from repro.models.mamba2 import ssd_chunked
 from repro.runtime.sharding import ShardingRules
 from repro.runtime.sequence_parallel import ssd_sharded
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 rules = ShardingRules(mesh=mesh, batch_axes=("data",), kind="train")
 Bt, T, H, P, N = 2, 64, 3, 8, 16
 ks = jax.random.split(jax.random.key(1), 6)
