@@ -1,15 +1,19 @@
-"""Closed-loop elastic streaming pipeline (paper §4.2, Fig. 8) — declarative.
+"""Closed-loop elastic streaming under the resource arbiter (paper §4.2).
 
-Same scenario as before (MASS burst overloads a micro-batch stage, the
-threshold policy grows the pilot, then shrinks once the burst passes), but
-the ~80 lines of hand-wiring are now one spec: ``repro.pipeline`` provisions
-broker + engine pilots, wires the MetricsBus and ElasticController, and
-tears everything down on exit.
+Same Fig. 8 scenario as before — a MASS burst overloads a micro-batch
+stage, the threshold policy grows it, then shrinks once the burst passes —
+but the pool is now *shared*: a second, lower-priority pipeline
+("scavenger") greedily soaks up spare devices. Both file demand with the
+service's single ResourceArbiter (docs/scheduler.md); when the burst hits,
+the high-priority pipeline's demand **preempts** the scavenger instead of
+finding the pool already taken.
 
     PYTHONPATH=src python examples/elastic_pipeline.py
 """
 import time
 
+from repro.core import PilotComputeService
+from repro.elastic import MetricsBus
 from repro.miniapps import StreamSource
 from repro.pipeline import Pipeline, register_processor, register_source
 
@@ -38,23 +42,45 @@ class SlowCount:
         return self.count
 
 
-pipe = (Pipeline.named("elastic-demo")
-        .topic("points", partitions=4)
-        .source("points", kind="points16", rate_msgs_per_s=60,
-                rate_schedule=[(1.0, 60), (5.0, 300), (5.0, 40)])
-        .stage("work", topic="points", processor="slow_count", cores_per_node=2,
-               batch_interval=0.05, max_batch_records=32, backpressure=False)
-        .elastic("work", policy="threshold", high_lag=80, low_lag=15,
-                 up_stable=2, down_stable=3, interval=0.1, cooldown=1.2,
-                 min_devices=2, max_devices=6, devices_per_step=2)
-        .build())
+@register_processor("bg_count")
+def bg_count(state, msgs):
+    return (state or 0) + len(msgs)
 
-with pipe.run(devices=8) as run:
-    ctl, t0 = run.controller("work"), time.monotonic()
+
+primary = (Pipeline.named("elastic-demo").share(2.0)
+           .topic("points", partitions=4)
+           .source("points", kind="points16", rate_msgs_per_s=60,
+                   rate_schedule=[(1.0, 60), (5.0, 300), (5.0, 40)])
+           .stage("work", topic="points", processor="slow_count",
+                  cores_per_node=2, priority=1,
+                  batch_interval=0.05, max_batch_records=32,
+                  backpressure=False)
+           .elastic("work", policy="threshold", high_lag=80, low_lag=15,
+                    up_stable=2, down_stable=3, interval=0.1, cooldown=1.2,
+                    min_devices=2, max_devices=6, devices_per_step=2)
+           .build())
+
+# the scavenger always wants more devices (any lag > -1 reads as "high"),
+# but at priority 0 / share 1 it only ever gets what the demo leaves over
+scavenger = (Pipeline.named("scavenger").share(1.0)
+             .topic("bg", partitions=2)
+             .source("bg", kind="points16", rate_msgs_per_s=40)
+             .stage("soak", topic="bg", processor="bg_count",
+                    batch_interval=0.05, backpressure=False)
+             .elastic("soak", policy="threshold", high_lag=-1.0, low_lag=-2.0,
+                      up_stable=1, interval=0.2, cooldown=0.3,
+                      min_devices=1, max_devices=8)
+             .build())
+
+bus = MetricsBus()
+svc = PilotComputeService(devices=list(range(8)), metrics=bus)
+with primary.run(service=svc, bus=bus) as run, \
+        scavenger.run(service=svc, bus=bus) as bg:
+    ctl, soak, t0 = run.controller("work"), bg.controller("soak"), time.monotonic()
     while not (run.scenario("points").finished and ctl.devices == 2):
         print(f"t={time.monotonic() - t0:5.1f}s  lag={run.lag('work'):4.0f}  "
-              f"devices={ctl.devices}")
-        if time.monotonic() - t0 > 30:
+              f"devices: demo={ctl.devices} scavenger={soak.devices}")
+        if time.monotonic() - t0 > 40:
             break
         time.sleep(0.5)
     ups, downs = ctl.events.of("scale_up"), ctl.events.of("scale_down")
@@ -62,5 +88,10 @@ with pipe.run(devices=8) as run:
     print(f"\nprocessed {stats.records} records in {stats.batches} batches")
     for e in list(ups) + list(downs):
         print(f"  {e.action}: {e.devices_before} -> {e.devices_after} devices ({e.reason})")
+    print(f"arbiter: {svc.arbiter.preemptions} preemption(s), "
+          f"{len(svc.arbiter.events)} scheduling events")
     assert ups and downs, "expected the burst to trigger a scale-up and a scale-down"
+    assert svc.arbiter.preemptions >= 1, \
+        "the burst should preempt the scavenger, not queue behind it"
+svc.cancel()
 print("elastic pipeline OK")

@@ -25,6 +25,9 @@ class TokenBucket:
         self._tokens = float(rate_bytes_per_s or 0)
         self._last = time.monotonic()
         self._lock = threading.Lock()
+        #: cumulative seconds callers spent blocked waiting for tokens —
+        #: the saturation signal broker elasticity scales on
+        self.stall_seconds = 0.0
 
     def consume(self, n: int) -> None:
         if not self.rate:
@@ -37,7 +40,9 @@ class TokenBucket:
                 if self._tokens >= n:
                     self._tokens -= n
                     return
-                time.sleep(min((n - self._tokens) / self.rate, 0.1))
+                wait = min((n - self._tokens) / self.rate, 0.1)
+                self.stall_seconds += wait
+                time.sleep(wait)
 
 
 @dataclass
@@ -72,6 +77,10 @@ class BrokerCluster:
         self._offsets: dict[tuple[str, str, int], int] = {}  # (group, topic, part) -> committed
         self._next_node = 0
         self.io_rate_per_node = io_rate_per_node
+        #: stall accumulated by since-removed nodes — keeps
+        #: ``io_stall_seconds`` monotonic across scale-downs (a drop would
+        #: read as a spurious idle tick to the saturation probe)
+        self._retired_stall = 0.0
         for _ in range(n_nodes):
             self.add_node()
 
@@ -87,7 +96,9 @@ class BrokerCluster:
 
     def remove_node(self, node_id: int) -> None:
         with self._lock:
-            self._nodes.pop(node_id, None)
+            node = self._nodes.pop(node_id, None)
+            if node is not None:
+                self._retired_stall += node.bucket.stall_seconds
             self._rebalance_locked()
 
     def fail_node(self, node_id: int) -> None:
@@ -113,6 +124,16 @@ class BrokerCluster:
     def n_nodes(self) -> int:
         with self._lock:
             return len(self._alive_nodes())
+
+    def io_stall_seconds(self) -> float:
+        """Total time producers/consumers have spent blocked in this
+        cluster's token buckets (cumulative and monotonic — removed nodes'
+        stall is retained). The broker demand estimator differentiates
+        this into a stall *fraction*."""
+        with self._lock:
+            return self._retired_stall + sum(
+                n.bucket.stall_seconds for n in self._nodes.values()
+            )
 
     # ---- topics ------------------------------------------------------------
 

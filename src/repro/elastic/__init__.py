@@ -18,6 +18,7 @@ from repro.elastic.metrics import (
 from repro.elastic.policy import (
     HOLD,
     BinPackingPolicy,
+    BrokerSaturationPolicy,
     LatencyPolicy,
     PIDScalingPolicy,
     ScalingDecision,
@@ -29,6 +30,7 @@ from repro.elastic.policy import (
 __all__ = [
     "BatchMetrics",
     "BinPackingPolicy",
+    "BrokerSaturationPolicy",
     "ContinuousStats",
     "ElasticConfig",
     "ElasticController",

@@ -1,12 +1,24 @@
-"""ElasticController — the reconciler that closes the paper's loop.
+"""ElasticController — per-consumer reconciler, now also a demand estimator.
 
-Watches the :class:`MetricsBus`, asks a :class:`ScalingPolicy` for a device
-delta, and actuates it through the existing pilot machinery: growth is
-``PilotComputeService.submit_pilot(parent=base)`` (paper Listing 4 — an
-extension pilot whose lease the plugin folds in, firing the stream's
-``on_rescale`` re-sharding hook), shrink is ``Pilot.cancel()`` on the most
-recent extension. The controller owns only the extensions it created; the
-base pilot is never cancelled.
+Watches the :class:`MetricsBus` and asks a :class:`ScalingPolicy` for a
+resource delta. What happens next depends on the mode:
+
+* **direct** (no arbiter — the pre-scheduler behavior, unchanged): the
+  controller actuates itself. Growth is
+  ``PilotComputeService.submit_pilot(parent=base)`` (paper Listing 4 — an
+  extension pilot whose lease the plugin folds in, firing the stream's
+  ``on_rescale`` re-sharding hook), shrink is ``Pilot.cancel()`` on the
+  most recent extension.
+* **arbitrated** (``arbiter=`` + ``request=`` given): the controller only
+  *estimates demand* — it folds the policy's delta into a target resource
+  count and files it via ``ResourceArbiter.update``. The arbiter decides
+  what is actually granted (weighted fair share across every consumer of
+  the pool) and actuates through :meth:`scale_to`.
+
+Either way the controller owns only the extensions it created; the base
+pilot is never cancelled. ``unit="nodes"`` makes the same reconciler manage
+broker nodes (logical host slots) instead of devices — extension pilots on
+the broker pilot add/remove ``BrokerCluster`` nodes through the plugin.
 """
 from __future__ import annotations
 
@@ -48,12 +60,22 @@ class ElasticController:
         lag_probe: Callable[[], float] | None = None,
         probes: dict[str, Callable[[], float]] | None = None,
         stream: str | None = None,
+        arbiter=None,
+        request=None,
+        unit: str = "devices",
     ):
         self.service = service
         self.pilot = pilot  # base pilot; extensions hang off it
         self.bus = bus
         self.policy = policy
         self.config = config or ElasticConfig()
+        #: "devices" (engine pilots) or "nodes" (broker pilots — the lease's
+        #: logical host slots; BrokerPlugin.extend/shrink add/remove nodes)
+        self.unit = unit
+        #: repro.scheduler.ResourceArbiter — when set, the controller files
+        #: demand instead of actuating, and ``request`` is its live handle
+        self.arbiter = arbiter
+        self.request = request
         #: published to ``elastic.lag`` each pass — authoritative when the
         #: engine is too stalled to publish its own ``stream.lag``
         self.lag_probe = lag_probe
@@ -70,15 +92,27 @@ class ElasticController:
         self._last_error: BaseException | None = None
         # reentrant: _shrink reads the devices property while holding it
         self._lock = threading.RLock()
+        if arbiter is not None:
+            if request is None:
+                raise ValueError("arbiter mode needs a ResourceRequest")
+            request.actuator = self.scale_to
+            request.current_fn = lambda: self.devices
+            request.set_target(max(self.devices, request.min_devices))
+            arbiter.submit(request)
 
     # -- observed state -------------------------------------------------------
 
+    def _lease_size(self, pilot) -> int:
+        lease = pilot.lease
+        return len(lease.nodes) if self.unit == "nodes" else len(lease.devices)
+
     @property
     def devices(self) -> int:
-        """Devices currently serving the pipeline (base + live extensions)."""
+        """Resources currently serving the consumer (base + live
+        extensions) — devices for engine pilots, nodes for the broker."""
         with self._lock:
-            return len(self.pilot.lease.devices) + sum(
-                len(p.lease.devices) for p in self.extensions
+            return self._lease_size(self.pilot) + sum(
+                self._lease_size(p) for p in self.extensions
             )
 
     @property
@@ -103,11 +137,76 @@ class ElasticController:
         # adding up_stable*interval of latency after every cooldown collision
         if now - self._last_action_t < self.config.cooldown:
             applied = HOLD
+        elif self.arbiter is not None:
+            applied = self._submit_demand(self.policy.decide(snap), now)
         else:
             applied = self._apply(self.policy.decide(snap), snap, now)
-        self.bus.publish("elastic.devices", self.devices, t=now)
-        self.bus.publish("elastic.decision", applied.delta_devices, t=now)
+        self.bus.publish("elastic.devices", self.devices, t=now, **labels)
+        self.bus.publish("elastic.decision", applied.delta_devices, t=now, **labels)
         return applied
+
+    def _labels(self) -> dict:
+        return {} if self.stream is None else {"stream": self.stream}
+
+    def _desired(self, decision: ScalingDecision) -> int | None:
+        """Fold a policy delta into an absolute resource target (the same
+        lease-rounding rules ``_apply`` uses), clamped to the controller's
+        own band. ``None`` = hold."""
+        if decision.delta_devices == 0:
+            return None
+        step = max(self.config.devices_per_step, 1)
+        n = abs(decision.delta_devices)
+        if decision.absolute:
+            want = (-(-n // step) if decision.scale_up else n // step) * step
+        else:
+            want = n * step
+        if want <= 0:
+            return None
+        cur = self.devices
+        target = cur + want if decision.scale_up else cur - want
+        target = max(target, self.config.min_devices)
+        if self.config.max_devices is not None:
+            target = min(target, self.config.max_devices)
+        return target
+
+    def _submit_demand(self, decision: ScalingDecision, now: float) -> ScalingDecision:
+        """Arbiter mode: the policy's verdict becomes a demand revision, not
+        an actuation — the arbiter owns the pool and will call
+        :meth:`scale_to` with whatever is actually granted."""
+        target = self._desired(decision)
+        if target is None or target == self.request.target:
+            return HOLD
+        before = self.devices
+        self.arbiter.update(self.request.name, target)
+        self._last_action_t = now  # cooldown paces demand revisions too
+        self.bus.publish("elastic.target", target, t=now, **self._labels())
+        return ScalingDecision(target - before, decision.reason)
+
+    def scale_to(self, n: int) -> int:
+        """Idempotent absolute actuator (the arbiter's grant callback):
+        grow/shrink extension pilots until ``n`` resources serve the
+        consumer. Returns the count actually reached."""
+        with self._lock:
+            before = self.devices
+            if n > before:
+                want = n - before
+                if self.unit == "devices":
+                    want = min(want, self.service.pool.free_devices)
+                if want > 0:
+                    self._grow(want)
+            elif n < before:
+                self._shrink(before - n)
+            after = self.devices
+        if after != before:
+            now = time.monotonic()
+            action = "scale_up" if after > before else "scale_down"
+            labels = self._labels()
+            self.events.record(ScalingEvent(now, action, after - before,
+                                            before, after, f"granted {n}"))
+            self.bus.publish("elastic.event",
+                             1.0 if after > before else -1.0, t=now, **labels)
+            self.bus.publish("elastic.devices", after, t=now, **labels)
+        return after
 
     def _apply(self, decision: ScalingDecision, snap: MetricsSnapshot, now: float) -> ScalingDecision:
         if decision.delta_devices == 0:
@@ -143,16 +242,27 @@ class ElasticController:
         after = self.devices
         event = ScalingEvent(now, action, after - before, before, after, decision.reason)
         self.events.record(event)
-        self.bus.publish("elastic.event", 1.0 if action == "scale_up" else -1.0, t=now)
+        self.bus.publish("elastic.event", 1.0 if action == "scale_up" else -1.0,
+                         t=now, **self._labels())
         return ScalingDecision(after - before, decision.reason)
 
-    def _grow(self, n_devices: int) -> None:
-        pcd = PilotComputeDescription(
-            number_of_nodes=1,
-            cores_per_node=n_devices,
-            framework=self.pilot.pcd.framework,
-            parent=self.pilot,
-        )
+    def _grow(self, n: int) -> None:
+        if self.unit == "nodes":
+            # broker growth: the extension's *host slots* become cluster
+            # nodes (BrokerPlugin.extend); no devices are consumed
+            pcd = PilotComputeDescription(
+                number_of_nodes=n,
+                cores_per_node=1,
+                framework=self.pilot.pcd.framework,
+                parent=self.pilot,
+            )
+        else:
+            pcd = PilotComputeDescription(
+                number_of_nodes=1,
+                cores_per_node=n,
+                framework=self.pilot.pcd.framework,
+                parent=self.pilot,
+            )
         ext = self.service.submit_pilot(pcd)
         with self._lock:
             self.extensions.append(ext)
@@ -166,7 +276,7 @@ class ElasticController:
                 if not self.extensions:
                     break
                 candidate = self.extensions[-1]
-                size = len(candidate.lease.devices)
+                size = self._lease_size(candidate)
                 if size == 0:  # already drained elsewhere: just drop it
                     self.extensions.pop()
                     continue
@@ -207,6 +317,8 @@ class ElasticController:
 
     def shutdown(self, *, release_extensions: bool = True) -> None:
         self.stop()
+        if self.arbiter is not None and self.request is not None:
+            self.arbiter.withdraw(self.request.name)
         if release_extensions:
             with self._lock:
                 exts, self.extensions = list(self.extensions), []

@@ -203,6 +203,10 @@ class MetricsSnapshot:
     #: latency creep before it surfaces as lag
     latency_p50: float = 0.0
     latency_p99: float = 0.0
+    #: fraction of wall-clock time producers spent blocked in broker
+    #: token buckets (``broker.stall_frac`` gauge) — the broker
+    #: controller's saturation signal
+    broker_stall_frac: float = 0.0
 
     @classmethod
     def capture(cls, bus: MetricsBus, pool: Any | None = None,
@@ -243,6 +247,7 @@ class MetricsSnapshot:
             leased = int(bus.value("pool.devices_leased"))
             util = bus.value("pool.utilization")
         busy = max(_per_stream("stream.busy_frac").values(), default=0.0)
+        stall = max(_per_stream("broker.stall_frac").values(), default=0.0)
         p50 = max(_per_stream("stream.latency_p50").values(), default=0.0)
         p99 = max(_per_stream("stream.latency_p99").values(), default=0.0)
         demands = _per_stream("stream.records_per_sec")
@@ -266,4 +271,5 @@ class MetricsSnapshot:
             stage_demands=demands,
             latency_p50=p50,
             latency_p99=p99,
+            broker_stall_frac=stall,
         )

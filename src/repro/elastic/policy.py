@@ -196,6 +196,49 @@ class LatencyPolicy(ScalingPolicy):
         return HOLD
 
 
+@dataclass
+class BrokerSaturationPolicy(ScalingPolicy):
+    """Broker-node elasticity from the producer-side token-bucket signal.
+
+    When producers spend a sustained fraction of wall-clock time blocked in
+    the broker nodes' token buckets (``snap.broker_stall_frac`` — the
+    paper's 1-broker-bottleneck effect, Figs. 8/9), the cluster needs more
+    nodes; when the buckets are idle, it can give nodes back. Same
+    consecutive-observation hysteresis as
+    :class:`ThresholdHysteresisPolicy`, but the actuation unit is broker
+    *nodes*, not devices (the controller runs with ``unit="nodes"``).
+    """
+
+    high_stall: float = 0.3  # fraction of time producers sit in buckets
+    low_stall: float = 0.02
+    up_stable: int = 2
+    down_stable: int = 4
+    step: int = 1
+
+    _above: int = field(default=0, repr=False)
+    _below: int = field(default=0, repr=False)
+
+    def decide(self, snap: MetricsSnapshot) -> ScalingDecision:
+        stall = snap.broker_stall_frac
+        if stall >= self.high_stall:
+            self._above += 1
+            self._below = 0
+        elif stall <= self.low_stall:
+            self._below += 1
+            self._above = 0
+        else:
+            self._above = self._below = 0
+        if self._above >= self.up_stable:
+            self._above = 0
+            return ScalingDecision(self.step,
+                                   f"broker stall {stall:.0%} >= {self.high_stall:.0%}")
+        if self._below >= self.down_stable:
+            self._below = 0
+            return ScalingDecision(-self.step,
+                                   f"broker stall {stall:.0%} <= {self.low_stall:.0%}")
+        return HOLD
+
+
 def first_fit_decreasing(items: dict[str, float], capacity: float) -> list[list[str]]:
     """Pack named demands into the fewest ``capacity``-sized bins (FFD).
 

@@ -17,7 +17,10 @@ import numpy as np
 
 from repro.configs.registry import get_arch
 from repro.core import PilotComputeService
+from repro.elastic import MetricsBus
+from repro.launch import instrumented
 from repro.miniapps import LMServeApp, SourceConfig, TokenSource
+from repro.scheduler import ResourceRequest
 
 
 def main() -> None:
@@ -34,12 +37,17 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
 
-    svc = PilotComputeService()
+    bus = MetricsBus()
+    svc = PilotComputeService(metrics=bus)
     kafka = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"})
     cluster = kafka.get_context()
     cluster.create_topic("requests", 2)
     spark = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"})
     ctx = spark.get_context()
+    held = len(spark.lease.devices)
+    svc.get_arbiter(bus).submit(ResourceRequest(
+        "launch/serve", min_devices=held, max_devices=held, target=held,
+        current_fn=lambda: len(spark.lease.devices)))
 
     app = LMServeApp(cfg, prompt_len=args.prompt_len, gen_tokens=args.gen_tokens, batch=args.batch)
     params = app.model.init(jax.random.key(0))
@@ -53,8 +61,10 @@ def main() -> None:
     ).start()
 
     stream = ctx.stream(
-        cluster, "requests", group="server", process_fn=app.process, state=params,
+        cluster, "requests", group="server",
+        process_fn=instrumented(app, bus, "serve"), state=params,
         batch_interval=0.1, max_batch_records=1,
+        metrics=bus, metrics_label="serve",
     ).start()
     t0 = time.time()
     stream.await_batches(args.requests, timeout=3600)
@@ -65,6 +75,8 @@ def main() -> None:
         f"[serve] {app.stats.messages} request batches, {app.stats.items} tokens "
         f"generated in {dt:.1f}s ({app.stats.items/dt:.1f} tok/s)"
     )
+    print(f"[serve] bus: step_time={bus.value('serve.step_time', stream='serve'):.3f}s "
+          f"tokens_per_sec={bus.value('serve.tokens_per_sec', stream='serve'):.0f}")
     svc.cancel()
 
 

@@ -18,8 +18,11 @@ import numpy as np
 from repro.configs.registry import get_arch
 from repro.checkpoint import CheckpointManager
 from repro.core import PilotComputeService
+from repro.elastic import MetricsBus
+from repro.launch import instrumented
 from repro.miniapps import LMTrainApp, SourceConfig, TokenSource
 from repro.runtime.optimizer import OptimizerConfig
+from repro.scheduler import ResourceRequest
 
 
 def main() -> None:
@@ -41,12 +44,20 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
 
-    svc = PilotComputeService()
+    bus = MetricsBus()
+    svc = PilotComputeService(metrics=bus)
     kafka = svc.submit_pilot({"number_of_nodes": args.broker_nodes, "type": "kafka"})
     cluster = kafka.get_context()
     cluster.create_topic("tokens", args.partitions)
     spark = svc.submit_pilot({"number_of_nodes": 1, "type": "spark"})
     ctx = spark.get_context()
+    # file the training pilot's demand with the service's arbiter: a static
+    # reservation today, but pipelines sharing this pool now see (and must
+    # schedule around) the trainer's devices
+    held = len(spark.lease.devices)
+    svc.get_arbiter(bus).submit(ResourceRequest(
+        "launch/train", min_devices=held, max_devices=held, target=held,
+        current_fn=lambda: len(spark.lease.devices)))
 
     opt = OptimizerConfig(name=cfg.optimizer, learning_rate=args.lr, warmup_steps=5,
                           total_steps=max(args.steps, 10))
@@ -73,8 +84,10 @@ def main() -> None:
             ckpt.save(step, state, meta={"offsets": offsets, "arch": cfg.name})
 
     stream = ctx.stream(
-        cluster, "tokens", group="trainer", process_fn=app.process, state=state,
+        cluster, "tokens", group="trainer",
+        process_fn=instrumented(app, bus, "train"), state=state,
         batch_interval=0.2, max_batch_records=1, checkpoint_fn=checkpoint_fn,
+        metrics=bus, metrics_label="train",
     ).start()
 
     t0 = time.time()
@@ -88,6 +101,8 @@ def main() -> None:
         f"[train] {app.stats.batches} steps, {toks} tokens in {dt:.1f}s "
         f"({toks/dt:.0f} tok/s); loss {app.losses[0]:.3f} -> {app.losses[-1]:.3f}"
     )
+    print(f"[train] bus: step_time={bus.value('train.step_time', stream='train'):.3f}s "
+          f"tokens_per_sec={bus.value('train.tokens_per_sec', stream='train'):.0f}")
     svc.cancel()
 
 

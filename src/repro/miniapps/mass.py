@@ -77,6 +77,14 @@ class StreamSource:
         for t in self._threads:
             t.join(timeout)
 
+    @property
+    def finished(self) -> bool:
+        """True once every producer thread has run to completion (only
+        finite sources — ``total_messages`` set — ever finish)."""
+        return bool(self._threads) and all(
+            not t.is_alive() for t in self._threads
+        )
+
     def stop(self) -> None:
         self._stop.set()
         self.join(1.0)

@@ -1,0 +1,6 @@
+"""``python -m repro.pipeline`` — see :mod:`repro.pipeline.cli`."""
+import sys
+
+from repro.pipeline.cli import main
+
+sys.exit(main())

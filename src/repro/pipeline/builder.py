@@ -35,6 +35,7 @@ from repro.pipeline.spec import (
 _STAGE_FIELDS = {
     "engine", "nodes", "cores_per_node", "group", "output_topic", "emits",
     "batch_interval", "max_batch_records", "backpressure", "window",
+    "priority", "share", "colocate_with",
 }
 _SOURCE_FIELDS = {
     "rate_msgs_per_s", "total_messages", "n_producers", "seed", "rate_schedule",
@@ -61,15 +62,37 @@ class Pipeline:
     def __init__(self, name: str):
         self._name = name
         self._broker = BrokerSpec()
+        self._broker_elastic: ElasticSpec | None = None
         self._topics: dict[str, int] = {}
         self._sources: list[SourceSpec] = []
         self._stages: list[StageSpec] = []
         self._sinks: list[SinkSpec] = []
         self._elastic: dict[str, ElasticSpec] = {}
+        self._share = 1.0
 
     @classmethod
     def named(cls, name: str) -> "Pipeline":
         return cls(name)
+
+    @classmethod
+    def from_spec(cls, spec: PipelineSpec) -> "Pipeline":
+        """Rehydrate a builder from a (possibly deserialized) spec so it can
+        be re-validated — the ``repro-pipeline validate`` path for specs
+        that never went through ``build()``."""
+        p = cls(spec.name)
+        p._broker = spec.broker
+        p._broker_elastic = spec.broker.elastic
+        p._topics = dict(spec.broker.topics)
+        p._sources = list(spec.sources)
+        p._stages = list(spec.stages)
+        p._sinks = list(spec.sinks)
+        p._elastic = {s.name: s.elastic for s in spec.stages if s.elastic is not None}
+        p._share = spec.share
+        return p
+
+    def validate(self) -> list[str]:
+        """Every problem in the accumulated topology (empty = valid)."""
+        return self._validate()
 
     # -- broker ---------------------------------------------------------------
 
@@ -77,6 +100,25 @@ class Pipeline:
                io_rate_per_node: float | None = None) -> "Pipeline":
         self._broker = BrokerSpec(nodes=nodes, framework=framework,
                                   io_rate_per_node=io_rate_per_node)
+        return self
+
+    def broker_elastic(self, *, policy: str = "broker_saturation",
+                       interval: float = 0.5, min_nodes: int = 1,
+                       max_nodes: int | None = None, cooldown: float = 1.0,
+                       **params) -> "Pipeline":
+        """Make the *broker* elastic: a node-unit controller scales
+        ``BrokerCluster`` membership through the arbiter, by default off the
+        producer token-bucket saturation signal (``broker.stall_frac``)."""
+        self._broker_elastic = ElasticSpec(
+            policy=policy, params=params, interval=interval,
+            min_devices=min_nodes, max_devices=max_nodes, cooldown=cooldown,
+        )
+        return self
+
+    def share(self, weight: float) -> "Pipeline":
+        """Pipeline-level fair-share weight against other runs on a shared
+        service (default 1.0)."""
+        self._share = weight
         return self
 
     def topic(self, name: str, partitions: int = 4) -> "Pipeline":
@@ -157,6 +199,7 @@ class Pipeline:
             framework=self._broker.framework,
             topics=dict(self._topics),
             io_rate_per_node=self._broker.io_rate_per_node,
+            elastic=self._broker_elastic,
         )
         return PipelineSpec(
             name=self._name,
@@ -164,6 +207,7 @@ class Pipeline:
             sources=tuple(self._sources),
             stages=stages,
             sinks=tuple(self._sinks),
+            share=self._share,
         )
 
     def _validate(self) -> list[str]:
@@ -223,6 +267,54 @@ class Pipeline:
                 )
             if s.processor not in registry.known_processors():
                 errors.append(f"stage {s.name!r}: unknown processor {s.processor!r}")
+            if s.share <= 0:
+                errors.append(f"stage {s.name!r}: share must be > 0, got {s.share}")
+
+        by_stage_name = {s.name: s for s in self._stages}
+        for s in self._stages:
+            if s.colocate_with is None:
+                continue
+            target = by_stage_name.get(s.colocate_with)
+            if s.colocate_with == s.name:
+                errors.append(f"stage {s.name!r} cannot colocate_with itself")
+            elif target is None:
+                errors.append(
+                    f"stage {s.name!r}: unknown co-location target "
+                    f"{s.colocate_with!r}"
+                )
+            elif target.engine != s.engine:
+                errors.append(
+                    f"stage {s.name!r} (engine {s.engine!r}) cannot colocate "
+                    f"with {target.name!r} (engine {target.engine!r}): "
+                    "co-located stages share one pilot"
+                )
+            elif target.colocate_with is not None:
+                errors.append(
+                    f"stage {s.name!r}: co-location target {target.name!r} is "
+                    "itself co-located; point at the host stage directly"
+                )
+            if s.elastic is not None or s.name in self._elastic:
+                errors.append(
+                    f"stage {s.name!r}: a co-located stage cannot have its own "
+                    "elastic policy (the host stage's controller owns the pilot)"
+                )
+
+        if self._share <= 0:
+            errors.append(f"pipeline share must be > 0, got {self._share}")
+
+        if self._broker_elastic is not None:
+            el = self._broker_elastic
+            try:
+                cls = registry.resolve_policy(el.policy)
+            except KeyError as e:
+                errors.append(str(e.args[0]))
+            else:
+                try:
+                    cls(**dict(el.params))
+                except (TypeError, ValueError) as e:
+                    errors.append(f"broker elastic policy {el.policy!r}: {e}")
+            if el.min_devices < 1:
+                errors.append("broker elastic: min_nodes must be >= 1")
 
         errors.extend(self._cycle_errors())
 
@@ -311,4 +403,6 @@ def _stage_kwargs(s: StageSpec) -> dict:
         "max_batch_records": s.max_batch_records,
         "backpressure": s.backpressure, "window": dict(s.window),
         "options": dict(s.options),
+        "priority": s.priority, "share": s.share,
+        "colocate_with": s.colocate_with,
     }

@@ -12,6 +12,7 @@ from typing import Any, Callable
 
 from repro.elastic.policy import (
     BinPackingPolicy,
+    BrokerSaturationPolicy,
     LatencyPolicy,
     PIDScalingPolicy,
     ThresholdHysteresisPolicy,
@@ -23,6 +24,7 @@ POLICIES: dict[str, type] = {
     "pid": PIDScalingPolicy,
     "binpack": BinPackingPolicy,
     "latency": LatencyPolicy,
+    "broker_saturation": BrokerSaturationPolicy,
 }
 
 _SOURCES: dict[str, Callable] = {}

@@ -20,13 +20,35 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable
 
+import time
+
 from repro.broker.consumer import Consumer, ConsumerGroup
 from repro.broker.producer import Producer
 from repro.core import PilotComputeService
 from repro.elastic import ElasticConfig, ElasticController, MetricsBus
 from repro.pipeline import registry
-from repro.pipeline.spec import PipelineSpec, SinkSpec, StageSpec
+from repro.pipeline.spec import ElasticSpec, PipelineSpec, SinkSpec, StageSpec
+from repro.scheduler import HOSTS, ResourceRequest
 from repro.streaming.windows import SessionWindow, SlidingWindow, TumblingWindow
+
+
+class BrokerStallProbe:
+    """Differentiates the cluster's cumulative token-bucket stall seconds
+    into a per-tick stall *fraction* — the broker controller's saturation
+    signal (clamped to [0, 1]; concurrent producers can stall in
+    parallel)."""
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self._t = time.monotonic()
+        self._s = cluster.io_stall_seconds()
+
+    def __call__(self) -> float:
+        now, s = time.monotonic(), self.cluster.io_stall_seconds()
+        dt = max(now - self._t, 1e-6)
+        frac = (s - self._s) / dt
+        self._t, self._s = now, s
+        return min(max(frac, 0.0), 1.0)
 
 
 class SinkRunner:
@@ -90,7 +112,8 @@ class PipelineRun:
     """
 
     def __init__(self, spec: PipelineSpec, *, service: PilotComputeService | None = None,
-                 devices: int | list | None = None, bus: MetricsBus | None = None):
+                 devices: int | list | None = None, bus: MetricsBus | None = None,
+                 share: float | None = None):
         self.spec = spec
         self.bus = bus or MetricsBus()
         self._own_service = service is None
@@ -98,6 +121,12 @@ class PipelineRun:
             devs = list(range(devices)) if isinstance(devices, int) else devices
             service = PilotComputeService(devices=devs, metrics=self.bus)
         self.service = service
+        #: pipeline-level fair-share weight (spec.share unless overridden);
+        #: every stage request carries ``share * stage.share``
+        self.share = spec.share if share is None else share
+        #: the service's single ResourceArbiter — set during provisioning
+        #: iff any stage (or the broker) is elastic
+        self.arbiter = None
         self.cluster = None
         self._streams: dict[str, Any] = {}
         self._pilots: dict[str, Any] = {}
@@ -161,6 +190,16 @@ class PipelineRun:
         if self._own_service:
             self._push("service", self.service.cancel)
 
+        # one arbiter per *service*: every run sharing the pool files its
+        # requests here, so contention resolves by weight/priority instead
+        # of first-come-first-served. Refcounted — the loop stops when the
+        # last run releases it.
+        if spec.broker.elastic is not None or any(
+            s.elastic is not None for s in spec.stages
+        ):
+            self.arbiter = self.service.get_arbiter(self.bus).retain()
+            self._push("arbiter", self.arbiter.release)
+
         broker_pilot = self.service.submit_pilot({
             "number_of_nodes": spec.broker.nodes,
             "type": spec.broker.framework,
@@ -173,7 +212,12 @@ class PipelineRun:
         for topic, parts in spec.broker.topics.items():
             self.cluster.create_topic(topic, parts)
 
-        for stage in spec.stages:
+        # host stages before their co-located guests (a guest reuses the
+        # host's pilot, so the host must exist first)
+        ordered = [s for s in spec.stages if s.colocate_with is None] + [
+            s for s in spec.stages if s.colocate_with is not None
+        ]
+        for stage in ordered:
             self._provision_stage(stage)
 
         for sink in spec.sinks:
@@ -195,6 +239,12 @@ class PipelineRun:
                 ctl.start()
                 self._push(f"controller:{stage.name}", ctl.shutdown)
 
+        if spec.broker.elastic is not None:
+            ctl = self._make_broker_controller(spec.broker.elastic)
+            self._controllers["__broker__"] = ctl
+            ctl.start()
+            self._push("controller:__broker__", ctl.shutdown)
+
         for src_spec in spec.sources:
             source, scenario = self._make_source(src_spec)
             self._sources.setdefault(src_spec.topic, []).append(source)
@@ -206,21 +256,29 @@ class PipelineRun:
                 self._push(f"scenario:{src_spec.topic}", scenario.stop)
 
     def _provision_stage(self, stage: StageSpec) -> None:
-        framework = "spark" if stage.engine == "microbatch" else "flink"
-        pilot = self.service.submit_pilot({
-            "number_of_nodes": stage.nodes,
-            "cores_per_node": stage.cores_per_node,
-            "type": framework,
-        })
-        self._pilots[stage.name] = pilot
-        if not self._own_service:
-            self._push(f"pilot:{stage.name}", pilot.cancel)
+        if stage.colocate_with is not None:
+            # spec-level placement: the guest rides the host's pilot (and
+            # its rescales); the host owns provisioning and teardown
+            pilot = self._pilots[stage.colocate_with]
+            self._pilots[stage.name] = pilot
+        else:
+            framework = "spark" if stage.engine == "microbatch" else "flink"
+            pilot = self.service.submit_pilot({
+                "number_of_nodes": stage.nodes,
+                "cores_per_node": stage.cores_per_node,
+                "type": framework,
+            })
+            self._pilots[stage.name] = pilot
+            if not self._own_service:
+                self._push(f"pilot:{stage.name}", pilot.cancel)
         ctx = pilot.get_context()
         proc = registry.make_processor(stage.processor, dict(stage.options))
         self._processors[stage.name] = proc
-        # topic alone is ambiguous when two stages consume the same topic;
-        # label this stage's gauges (and its controller's scope) uniquely
-        label = f"{stage.topic}/{stage.consumer_group}"
+        # topic alone is ambiguous when two stages consume the same topic,
+        # and topic/group alone is ambiguous when two *pipelines* share a
+        # bus (the multi-tenant case) — qualify with the pipeline name so
+        # each controller only ever reads its own stage's gauges
+        label = f"{self.spec.name}/{stage.topic}/{stage.consumer_group}"
 
         if stage.engine == "microbatch":
             process_fn = proc.process if hasattr(proc, "process") else proc
@@ -267,6 +325,9 @@ class PipelineRun:
 
         return wrapped
 
+    def _request_name(self, component: str) -> str:
+        return f"{self.spec.name}/{component}"
+
     def _make_controller(self, stage: StageSpec) -> ElasticController:
         el = stage.elastic
         params = dict(el.params)
@@ -274,6 +335,16 @@ class PipelineRun:
             params.setdefault("batch_interval", stage.batch_interval)
         policy = registry.resolve_policy(el.policy)(**params)
         stream = self._streams[stage.name]
+        # no colocate hint on the request: an elastic stage is never a
+        # co-location guest (builder-validated), so spec-level placement is
+        # entirely the pilot sharing done in _provision_stage
+        request = ResourceRequest(
+            name=self._request_name(stage.name),
+            min_devices=el.min_devices,
+            max_devices=el.max_devices,
+            weight=stage.share * self.share,
+            priority=stage.priority,
+        )
         return ElasticController(
             self.service, self._pilots[stage.name], self.bus, policy,
             config=ElasticConfig(
@@ -285,6 +356,36 @@ class PipelineRun:
             # scope the controller's snapshot to this stage's stream gauges
             # (the bus is shared by every stage in the pipeline)
             stream=stream.metrics_label,
+            arbiter=self.arbiter,
+            request=request,
+        )
+
+    def _make_broker_controller(self, el: ElasticSpec) -> ElasticController:
+        """Spec-driven broker elasticity: a node-unit controller estimates
+        demand from the producer token-bucket saturation signal; arbiter
+        grants become ``BrokerCluster.add_node/remove_node`` via extension
+        pilots on the broker pilot — no direct ``add_node`` calls here."""
+        label = self._request_name("__broker__")
+        policy = registry.resolve_policy(el.policy)(**dict(el.params))
+        request = ResourceRequest(
+            name=label,
+            min_devices=el.min_devices,
+            max_devices=el.max_devices,
+            weight=self.share,
+            unit=HOSTS,
+        )
+        return ElasticController(
+            self.service, self._pilots["__broker__"], self.bus, policy,
+            config=ElasticConfig(
+                interval=el.interval, min_devices=el.min_devices,
+                max_devices=el.max_devices,
+                devices_per_step=el.devices_per_step, cooldown=el.cooldown,
+            ),
+            probes={"broker.stall_frac": BrokerStallProbe(self.cluster)},
+            stream=label,
+            unit="nodes",
+            arbiter=self.arbiter,
+            request=request,
         )
 
     def _make_source(self, src) -> tuple:
@@ -324,6 +425,19 @@ class PipelineRun:
     def sink(self, name: str) -> SinkRunner:
         return self._sinks[name]
 
+    @property
+    def controllers(self) -> dict[str, ElasticController]:
+        """Live controllers by stage name (plus ``__broker__``) — the
+        public view the CLI's progress loop reads."""
+        return dict(self._controllers)
+
+    @property
+    def sources_finished(self) -> bool:
+        """True once every (finite) source has produced its quota."""
+        return all(
+            src.finished for srcs in self._sources.values() for src in srcs
+        )
+
     def pilot(self, stage: str):
         return self._pilots[stage]
 
@@ -332,6 +446,11 @@ class PipelineRun:
         """The broker's pilot — parent for manual extension pilots
         (paper Listing 4)."""
         return self._pilots["__broker__"]
+
+    @property
+    def broker_controller(self) -> ElasticController:
+        """The node-unit controller created by ``BrokerSpec.elastic``."""
+        return self._controllers["__broker__"]
 
     def await_batches(self, stage: str, n: int, timeout: float = 60.0) -> None:
         self._streams[stage].await_batches(n, timeout=timeout)

@@ -26,7 +26,11 @@ def _freeze_options(opts: Mapping[str, Any] | None) -> dict:
 
 @dataclass(frozen=True)
 class BrokerSpec:
-    """The broker pilot: node count and topic layout."""
+    """The broker pilot: node count, topic layout, and (optionally) its own
+    elasticity. With ``elastic`` set, a node-unit controller watches the
+    producer token-bucket saturation signal (``broker.stall_frac``) and
+    drives ``BrokerCluster.add_node/remove_node`` through the arbiter —
+    application code never calls ``add_node`` itself."""
 
     nodes: int = 1
     framework: str = "kafka"
@@ -34,6 +38,8 @@ class BrokerSpec:
     topics: dict = field(default_factory=dict)
     #: per-node byte-rate budget (None = unlimited), paper's 1-broker bottleneck
     io_rate_per_node: float | None = None
+    #: node-unit ElasticSpec (min_devices/max_devices count broker *nodes*)
+    elastic: "ElasticSpec | None" = None
 
 
 @dataclass(frozen=True)
@@ -114,6 +120,13 @@ class StageSpec:
     #: processor factory kwargs
     options: dict = field(default_factory=dict)
     elastic: ElasticSpec | None = None
+    # arbitration attributes (repro.scheduler): strict priority tier,
+    # proportional weight within a tier, and a placement hint
+    priority: int = 0
+    share: float = 1.0
+    #: run on the same pilot as the named stage instead of provisioning a
+    #: fresh one (spec-level co-location; engines must match)
+    colocate_with: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "options", _freeze_options(self.options))
@@ -149,6 +162,10 @@ class PipelineSpec:
     sources: tuple = ()
     stages: tuple = ()
     sinks: tuple = ()
+    #: pipeline-level fair-share weight: several runs on one service split
+    #: contended devices proportionally to their shares (stage requests
+    #: carry ``pipeline.share * stage.share``)
+    share: float = 1.0
 
     def __post_init__(self):
         object.__setattr__(self, "sources", tuple(self.sources))
@@ -178,7 +195,9 @@ class PipelineSpec:
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "PipelineSpec":
         d = dict(d)
-        broker = BrokerSpec(**d.pop("broker", {}))
+        b = dict(d.pop("broker", {}))
+        bel = b.pop("elastic", None)
+        broker = BrokerSpec(**b, elastic=ElasticSpec(**bel) if bel is not None else None)
         sources = tuple(SourceSpec(**s) for s in d.pop("sources", ()))
         stages = []
         for s in d.pop("stages", ()):

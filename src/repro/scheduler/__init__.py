@@ -1,0 +1,20 @@
+"""Unified resource arbitration (paper §4.2, promoted to cluster level).
+
+One :class:`ResourceArbiter` per :class:`PilotComputeService` mediates every
+consumer's demand — pipeline stages, the broker, training drivers — against
+the shared ``DevicePool``: weighted fair share within priority tiers, FFD
+bin-packing for placement, preemption under pressure. Consumers file
+:class:`ResourceRequest`\\ s instead of acquiring pilots themselves; see
+docs/scheduler.md for the request/grant lifecycle.
+"""
+from repro.scheduler.arbiter import PoolTenant, ResourceArbiter, weighted_fair_share
+from repro.scheduler.request import DEVICES, HOSTS, ResourceRequest
+
+__all__ = [
+    "DEVICES",
+    "HOSTS",
+    "PoolTenant",
+    "ResourceArbiter",
+    "ResourceRequest",
+    "weighted_fair_share",
+]

@@ -379,9 +379,17 @@ def test_two_stages_on_one_topic_get_distinct_metric_labels():
         assert run.stream("a").metrics_label != run.stream("b").metrics_label
         run.await_batches("a", 1, timeout=20)
         run.await_batches("b", 1, timeout=20)
-        # each stage's gauges live under its own label on the shared bus
-        labels = set(run.bus.latest_by_label("stream.lag", "stream"))
-        assert {"in/a", "in/b"} <= labels
+        # each stage's gauges live under its own label on the shared bus,
+        # qualified by pipeline name so two runs sharing a bus never collide.
+        # Poll: the engine publishes stream.lag *after* bumping the batch
+        # counter await_batches watches, so the gauges can trail slightly.
+        want = {"sharedtopic/in/a", "sharedtopic/in/b"}
+        deadline = time.monotonic() + 10
+        labels = set()
+        while time.monotonic() < deadline and not want <= labels:
+            labels = set(run.bus.latest_by_label("stream.lag", "stream"))
+            time.sleep(0.05)
+        assert want <= labels
 
 
 def test_elastic_on_continuous_stage_has_a_working_lag_probe():

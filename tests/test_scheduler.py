@@ -1,0 +1,517 @@
+"""Resource arbitration (repro.scheduler): fair share, preemption,
+grant/revoke idempotence, co-location, broker elasticity, and the
+single-pipeline no-regression path.
+
+Everything here drives the arbiter synchronously (``ctl.step()`` +
+``arb.reconcile()``) against real in-process pilots, so the assertions are
+deterministic — no sleeps against background threads except where a test
+explicitly measures the wake-on-demand latency.
+"""
+import time
+
+import pytest
+
+from repro.core import PilotComputeService
+from repro.elastic import (
+    BrokerSaturationPolicy,
+    ElasticConfig,
+    ElasticController,
+    MetricsBus,
+    MetricsSnapshot,
+    ThresholdHysteresisPolicy,
+)
+from repro.pipeline import Pipeline, PipelineSpec, PipelineValidationError, register_processor
+from repro.scheduler import (
+    HOSTS,
+    PoolTenant,
+    ResourceArbiter,
+    ResourceRequest,
+    weighted_fair_share,
+)
+
+
+@register_processor("sched_noop")
+def _noop(state, msgs):
+    return (state or 0) + len(msgs)
+
+
+def _elastic_pipeline(name, share=1.0, priority=0, max_devices=8, greedy=True):
+    """One-stage pipeline whose estimator always wants more (high_lag=-1:
+    any lag is 'too much'), so device splits are decided purely by the
+    arbiter."""
+    high, low = (-1.0, -2.0) if greedy else (1e9, -1.0)
+    return (Pipeline.named(name).share(share)
+            .topic("in", partitions=2)
+            .source("in", kind="cluster", rate_msgs_per_s=30)
+            .stage("work", topic="in", processor="sched_noop",
+                   batch_interval=0.05, backpressure=False, priority=priority)
+            .elastic("work", policy="threshold", high_lag=high, low_lag=low,
+                     up_stable=1, interval=999.0, cooldown=0.0,
+                     min_devices=1, max_devices=max_devices)
+            .build())
+
+
+# ---------------------------------------------------------------------------
+# pure allocation
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_fair_share_splits_by_weight():
+    reqs = [ResourceRequest("a", min_devices=1, weight=2.0, target=100),
+            ResourceRequest("b", min_devices=1, weight=1.0, target=100)]
+    assert weighted_fair_share(reqs, 9) == {"a": 6, "b": 3}
+    # demands below fair share are capped at demand, surplus flows on
+    reqs = [ResourceRequest("a", min_devices=0, weight=2.0, target=2),
+            ResourceRequest("b", min_devices=0, weight=1.0, target=100)]
+    assert weighted_fair_share(reqs, 9) == {"a": 2, "b": 7}
+
+
+def test_weighted_fair_share_priority_is_strict():
+    reqs = [ResourceRequest("hi", min_devices=1, priority=1, target=6),
+            ResourceRequest("lo", min_devices=1, priority=0, target=6)]
+    alloc = weighted_fair_share(reqs, 8)
+    assert alloc == {"hi": 6, "lo": 2}
+    # floors always survive, even fully contended
+    alloc = weighted_fair_share(reqs, 2)
+    assert alloc == {"hi": 1, "lo": 1}
+
+
+def test_request_validates_and_clamps_demand():
+    with pytest.raises(ValueError):
+        ResourceRequest("w", weight=0.0)
+    with pytest.raises(ValueError):
+        ResourceRequest("m", min_devices=4, max_devices=2)
+    r = ResourceRequest("c", min_devices=2, max_devices=5, target=100)
+    assert r.demand == 5
+    r.set_target(0)
+    assert r.demand == 2
+
+
+# ---------------------------------------------------------------------------
+# arbiter core (real pool, PoolTenant actuators)
+# ---------------------------------------------------------------------------
+
+
+def _tenant_arbiter(n_devices=8):
+    svc = PilotComputeService(devices=list(range(n_devices)))
+    return svc, ResourceArbiter(svc, MetricsBus())
+
+
+def test_grant_and_revoke_are_idempotent():
+    svc, arb = _tenant_arbiter()
+    calls = []
+    tenant = PoolTenant(svc)
+
+    def counting_actuator(n):
+        calls.append(n)
+        return tenant.scale_to(n)
+
+    req = tenant.request("t", min_devices=0, max_devices=8)
+    req.actuator = counting_actuator
+    arb.submit(req)
+    arb.update("t", 4)
+    arb.reconcile()
+    assert tenant.devices == 4 and calls == [4]
+    # unchanged demand: repeated reconciles must not re-actuate
+    arb.reconcile()
+    arb.reconcile()
+    assert calls == [4]
+    arb.update("t", 1)
+    arb.reconcile()
+    assert tenant.devices == 1 and calls == [4, 1]
+    assert svc.pool.free_devices == 7
+    # the revocation is recorded as a voluntary revoke, not a preemption
+    assert [e.action for e in arb.events] == ["grant", "revoke"]
+
+
+def test_preemption_frees_devices_for_higher_priority():
+    svc, arb = _tenant_arbiter(n_devices=6)
+    lo = PoolTenant(svc)
+    arb.submit(lo.request("lo", min_devices=1, priority=0))
+    arb.update("lo", 6)
+    arb.reconcile()
+    assert lo.devices == 6
+    hi = PoolTenant(svc)
+    arb.submit(hi.request("hi", min_devices=0, priority=1))
+    arb.update("hi", 4)
+    arb.reconcile()
+    assert hi.devices == 4
+    assert lo.devices == 2
+    preempts = [e for e in arb.events if e.action == "preempt"]
+    assert len(preempts) == 1 and preempts[0].delta == -4
+    assert arb.preemptions == 1
+    # shrink-before-grow within one pass: nothing left unplaced
+    assert svc.pool.free_devices == 0
+
+
+def test_preemption_lands_within_one_background_interval():
+    svc, arb = _tenant_arbiter(n_devices=6)
+    arb.interval = 5.0  # wake-on-update must beat the slow timer
+    lo = PoolTenant(svc)
+    arb.submit(lo.request("lo", min_devices=1, priority=0))
+    arb.update("lo", 6)
+    arb.start()
+    try:
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and lo.devices < 6:
+            time.sleep(0.01)
+        assert lo.devices == 6
+        hi = PoolTenant(svc)
+        arb.submit(hi.request("hi", min_devices=0, priority=1))
+        t0 = time.monotonic()
+        arb.update("hi", 4)
+        while time.monotonic() < deadline and hi.devices < 4:
+            time.sleep(0.01)
+        latency = time.monotonic() - t0
+        assert hi.devices == 4 and lo.devices == 2
+        assert latency < arb.interval, (
+            f"preemption took {latency:.2f}s — the demand filing should wake "
+            f"the loop, not wait out the {arb.interval}s interval"
+        )
+    finally:
+        arb.stop()
+
+
+def test_static_reservations_participate_without_actuation():
+    svc, arb = _tenant_arbiter(n_devices=4)
+    pilot = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": 2,
+                              "type": "spark"})
+    arb.submit(ResourceRequest(
+        "static", min_devices=2, max_devices=2, target=2,
+        current_fn=lambda: len(pilot.lease.devices)))
+    t = PoolTenant(svc)
+    arb.submit(t.request("greedy", min_devices=0))
+    arb.update("greedy", 99)
+    arb.reconcile()
+    # the reservation's devices were never handed to the greedy tenant
+    assert t.devices == 2
+    assert len(pilot.lease.devices) == 2
+
+
+def test_pure_reservation_floor_survives_repeated_reconciles():
+    """A request with neither actuator nor current_fn holds nothing — its
+    grant must not be double-counted as arbitrable capacity, or a greedy
+    tenant erodes the reserved floor on the second tick."""
+    svc, arb = _tenant_arbiter(n_devices=8)
+    arb.submit(ResourceRequest("reserved", min_devices=3, target=3))
+    t = PoolTenant(svc)
+    arb.submit(t.request("greedy", min_devices=0))
+    arb.update("greedy", 8)
+    for _ in range(4):
+        arb.reconcile()
+        assert t.devices == 5, "the 3-device reservation must hold every tick"
+
+
+# ---------------------------------------------------------------------------
+# acceptance: two PipelineRuns, 2:1 shares, constrained pool
+# ---------------------------------------------------------------------------
+
+
+def test_two_runs_with_2_to_1_shares_converge_to_2_to_1_split():
+    bus = MetricsBus()
+    svc = PilotComputeService(devices=list(range(9)), metrics=bus)
+    run_a = _elastic_pipeline("shareA", share=2.0).run(service=svc, bus=bus).start()
+    run_b = _elastic_pipeline("shareB", share=1.0).run(service=svc, bus=bus).start()
+    try:
+        arb = svc.arbiter
+        assert run_a.arbiter is arb and run_b.arbiter is arb, \
+            "both runs must share the service's one arbiter"
+        ca, cb = run_a.controller("work"), run_b.controller("work")
+        for _ in range(12):
+            ca.step()
+            cb.step()
+            arb.reconcile()
+        assert (ca.devices, cb.devices) == (6, 3), \
+            f"expected 2:1 split of 9 devices, got {ca.devices}:{cb.devices}"
+        # the decision trail is on the bus
+        assert bus.value("scheduler.granted", request="shareA/work") == 6
+        assert bus.value("scheduler.granted", request="shareB/work") == 3
+    finally:
+        run_a.stop()
+        run_b.stop()
+        svc.cancel()
+    assert svc.pool.leased_devices == 0
+
+
+def test_priority_stage_preempts_lower_priority_run():
+    bus = MetricsBus()
+    svc = PilotComputeService(devices=list(range(6)), metrics=bus)
+    lo_run = _elastic_pipeline("loP", priority=0, max_devices=6).run(
+        service=svc, bus=bus).start()
+    try:
+        clo = lo_run.controller("work")
+        arb = svc.arbiter
+        for _ in range(8):
+            clo.step()
+            arb.reconcile()
+        assert clo.devices >= 5  # low-priority filled the pool
+        hi_run = _elastic_pipeline("hiP", priority=1, max_devices=4).run(
+            service=svc, bus=bus).start()
+        try:
+            chi = hi_run.controller("work")
+            before = clo.devices
+            for _ in range(6):
+                chi.step()
+                arb.reconcile()
+            assert chi.devices == 4
+            assert clo.devices < before
+            assert clo.devices >= 1  # floor honored
+            assert any(e.action == "preempt" for e in arb.events)
+        finally:
+            hi_run.stop()
+    finally:
+        lo_run.stop()
+        svc.cancel()
+
+
+# ---------------------------------------------------------------------------
+# no-regression: a single pipeline behaves as in the pre-arbiter world
+# ---------------------------------------------------------------------------
+
+
+def test_single_run_grants_exactly_what_the_estimator_asks():
+    """Alone on the pool, the arbiter is a pass-through: every demand step
+    lands verbatim (the direct-mode trajectory), grow and shrink."""
+    spec = (Pipeline.named("solo")
+            .topic("in", partitions=2)
+            .source("in", kind="cluster", rate_msgs_per_s=30)
+            .stage("work", topic="in", processor="sched_noop",
+                   batch_interval=0.05, backpressure=False)
+            .elastic("work", policy="threshold", high_lag=80, low_lag=15,
+                     up_stable=1, down_stable=1, interval=999.0, cooldown=0.0,
+                     min_devices=1, max_devices=6, devices_per_step=2)
+            .build())
+    with spec.run(devices=8) as run:
+        ctl = run.controller("work")
+        arb = run.arbiter
+        bus = run.bus
+        label = ctl.stream
+
+        def drive(lag):
+            bus.publish("stream.lag", lag, stream=label)
+            bus.publish("stream.busy_frac", 0.0, stream=label)
+            ctl.lag_probe = lambda: lag
+            ctl.step()
+            arb.reconcile()
+
+        assert ctl.devices == 1
+        drive(500)  # above high watermark -> +devices_per_step
+        assert ctl.devices == 3
+        drive(500)
+        assert ctl.devices == 5
+        drive(0)  # drained -> -devices_per_step
+        assert ctl.devices == 3
+        drive(0)
+        assert ctl.devices == 1  # never below min_devices
+        drive(0)
+        assert ctl.devices == 1
+        ups = ctl.events.of("scale_up")
+        downs = ctl.events.of("scale_down")
+        assert len(ups) == 2 and len(downs) == 2
+    assert run.service.pool.leased_devices == 0
+
+
+def test_controller_without_arbiter_is_unchanged_direct_mode():
+    """The pre-scheduler imperative path still works byte-for-byte: no
+    arbiter, controller actuates itself."""
+    bus = MetricsBus()
+    svc = PilotComputeService(devices=list(range(4)), metrics=bus)
+    kafka = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"})
+    kafka.get_context().create_topic("t", 1)
+    pilot = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": 1,
+                              "type": "spark"})
+    ctl = ElasticController(
+        svc, pilot, bus,
+        ThresholdHysteresisPolicy(high_lag=10, low_lag=1, up_stable=1),
+        config=ElasticConfig(cooldown=0.0),
+        lag_probe=lambda: 100.0,
+    )
+    assert ctl.arbiter is None
+    ctl.step()
+    assert ctl.devices == 2  # grew immediately, no arbiter in the loop
+    svc.cancel()
+
+
+# ---------------------------------------------------------------------------
+# co-location
+# ---------------------------------------------------------------------------
+
+
+def test_colocated_stages_share_one_pilot_and_rescale_together():
+    spec = (Pipeline.named("colo")
+            .topic("a", partitions=2).topic("b", partitions=2)
+            .source("a", kind="cluster", rate_msgs_per_s=30, total_messages=8)
+            .source("b", kind="cluster", rate_msgs_per_s=30, total_messages=8)
+            .stage("host", topic="a", processor="sched_noop",
+                   cores_per_node=2, batch_interval=0.05, backpressure=False)
+            .stage("guest", topic="b", processor="sched_noop",
+                   colocate_with="host", batch_interval=0.05,
+                   backpressure=False)
+            .build())
+    with spec.run(devices=4) as run:
+        assert run.pilot("guest") is run.pilot("host")
+        # only the host's pilot leased devices (no second engine pilot)
+        assert run.service.pool.leased_devices == 2
+        run.await_batches("host", 1, timeout=20)
+        run.await_batches("guest", 1, timeout=20)
+    assert run.service.pool.leased_devices == 0
+
+
+def test_arbiter_placement_packs_colocated_requests_into_one_bin():
+    svc, arb = _tenant_arbiter(n_devices=8)
+    arb.submit(ResourceRequest("p/x", min_devices=2, target=2))
+    arb.submit(ResourceRequest("p/y", min_devices=1, target=1,
+                               colocate_with="p/x"))
+    arb.submit(ResourceRequest("p/z", min_devices=3, target=3))
+    bins = arb.placement(bin_size=4)
+    by_member = {m: i for i, b in enumerate(bins) for m in b}
+    assert by_member["p/x"] == by_member["p/y"], \
+        "co-located requests must land in the same bin"
+    assert by_member["p/z"] != by_member["p/x"]
+
+
+def test_builder_validates_colocation_targets():
+    def build(**kw):
+        return (Pipeline.named("v")
+                .topic("a")
+                .stage("host", topic="a", processor="sched_noop")
+                .stage("guest", topic="a", processor="sched_noop", **kw)
+                .build())
+
+    with pytest.raises(PipelineValidationError, match="unknown co-location"):
+        build(colocate_with="ghost")
+    with pytest.raises(PipelineValidationError, match="cannot colocate_with itself"):
+        (Pipeline.named("v").topic("a")
+         .stage("s", topic="a", processor="sched_noop", colocate_with="s")
+         .build())
+    with pytest.raises(PipelineValidationError, match="share one pilot"):
+        (Pipeline.named("v").topic("a")
+         .stage("host", topic="a", processor="sched_noop", engine="continuous",
+                window={"window": "tumbling", "size": 0.5})
+         .stage("guest", topic="a", processor="sched_noop",
+                colocate_with="host")
+         .build())
+    with pytest.raises(PipelineValidationError, match="cannot have its own elastic"):
+        (Pipeline.named("v").topic("a")
+         .stage("host", topic="a", processor="sched_noop")
+         .stage("guest", topic="a", processor="sched_noop",
+                colocate_with="host")
+         .elastic("guest", policy="threshold", high_lag=1, low_lag=0)
+         .build())
+
+
+# ---------------------------------------------------------------------------
+# broker elasticity through the arbiter
+# ---------------------------------------------------------------------------
+
+
+def test_broker_elastic_spec_drives_cluster_nodes_through_arbiter():
+    spec = (Pipeline.named("bk")
+            .broker(nodes=1, io_rate_per_node=1e9)
+            .broker_elastic(policy="broker_saturation", min_nodes=1,
+                            max_nodes=4)
+            .topic("t", partitions=4)
+            .source("t", kind="cluster", rate_msgs_per_s=20)
+            .stage("s", topic="t", processor="sched_noop",
+                   batch_interval=0.05, backpressure=False)
+            .build())
+    assert spec.broker.elastic.policy == "broker_saturation"
+    assert PipelineSpec.from_dict(spec.to_dict()) == spec
+    with spec.run(devices=2) as run:
+        assert run.cluster.n_nodes == 1
+        name = "bk/__broker__"
+        req = run.arbiter.request(name)
+        assert req.unit == HOSTS
+        # grant -> extension pilots on the broker pilot -> add_node
+        run.arbiter.update(name, 3)
+        run.arbiter.reconcile()
+        assert run.cluster.n_nodes == 3
+        # broker nodes never consume pool devices (host slots only)
+        assert run.service.pool.leased_devices == 1
+        run.arbiter.update(name, 1)
+        run.arbiter.reconcile()
+        assert run.cluster.n_nodes == 1
+        acts = [e.action for e in run.broker_controller.events]
+        assert acts == ["scale_up", "scale_down"]
+    assert run.service.pool.leased_devices == 0
+
+
+def test_broker_saturation_policy_hysteresis():
+    def snap(stall):
+        return MetricsSnapshot(
+            t=0.0, lag=0.0, records_per_sec=0.0, processing_delay=0.0,
+            scheduling_delay=0.0, busy_frac=0.0, devices_total=8,
+            devices_leased=0, utilization=0.0, broker_stall_frac=stall,
+        )
+
+    p = BrokerSaturationPolicy(high_stall=0.3, low_stall=0.02,
+                               up_stable=2, down_stable=2)
+    assert p.decide(snap(0.5)).delta_devices == 0  # first observation
+    d = p.decide(snap(0.5))
+    assert d.scale_up and d.delta_devices == 1
+    assert p.decide(snap(0.1)).delta_devices == 0  # between bands: hold
+    assert p.decide(snap(0.0)).delta_devices == 0
+    d = p.decide(snap(0.0))
+    assert d.scale_down
+
+
+def test_token_bucket_stall_seconds_accumulate():
+    from repro.broker.cluster import BrokerCluster
+    from repro.broker.records import Record
+
+    cluster = BrokerCluster(n_nodes=1, io_rate_per_node=2048.0)
+    cluster.create_topic("t", 1)
+    payload = bytes(1024)
+    for _ in range(8):  # ~8 KiB through a 2 KiB/s bucket -> must stall
+        cluster.append("t", 0, Record(payload, None, time.time()))
+    assert cluster.io_stall_seconds() > 0.5
+
+
+# ---------------------------------------------------------------------------
+# spec/serde of the new fields
+# ---------------------------------------------------------------------------
+
+
+def test_new_spec_fields_round_trip_and_default_sanely():
+    spec = (Pipeline.named("rt2").share(2.5)
+            .broker(nodes=2)
+            .broker_elastic(min_nodes=2, max_nodes=6, high_stall=0.4)
+            .topic("a", partitions=2)
+            .stage("x", topic="a", processor="sched_noop",
+                   priority=3, share=1.5)
+            .stage("y", topic="a", processor="sched_noop", colocate_with="x")
+            .build())
+    rt = PipelineSpec.from_dict(spec.to_dict())
+    assert rt == spec
+    assert rt.share == 2.5
+    assert rt.stage("x").priority == 3 and rt.stage("x").share == 1.5
+    assert rt.stage("y").colocate_with == "x"
+    assert rt.broker.elastic.params == {"high_stall": 0.4}
+    # defaults: old specs (no new fields) still deserialize
+    old = {"name": "old", "broker": {"topics": {"a": 1}},
+           "stages": [{"name": "s", "topic": "a", "processor": "sched_noop"}]}
+    loaded = PipelineSpec.from_dict(old)
+    assert loaded.share == 1.0
+    assert loaded.stages[0].priority == 0
+    assert loaded.stages[0].colocate_with is None
+    assert loaded.broker.elastic is None
+
+
+def test_cli_validate_catches_scheduler_field_errors(tmp_path):
+    from repro.pipeline.cli import main
+
+    spec = (Pipeline.named("cli")
+            .topic("a", partitions=1)
+            .stage("s", topic="a", processor="sched_noop")
+            .build())
+    bad = spec.to_dict()
+    bad["stages"][0]["colocate_with"] = "ghost"
+    bad["stages"][0]["share"] = -1.0
+    p = tmp_path / "bad.json"
+    import json
+
+    p.write_text(json.dumps(bad))
+    assert main(["validate", str(p)]) == 1
+    good = tmp_path / "good.json"
+    good.write_text(spec.to_json())
+    assert main(["validate", str(good)]) == 0
