@@ -9,18 +9,49 @@ streaming jobs cannot stall for checkpoints).
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
 import threading
 import time
-from typing import Any
+from typing import Any, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.utils.tree import tree_flatten_with_paths
+
+
+@contextlib.contextmanager
+def atomic_dir(final: str, lock: threading.Lock | None = None) -> Iterator[str]:
+    """Write a directory atomically: the body fills a ``.tmp`` sibling, and
+    only a clean exit swaps it into place with an ``os.rename`` commit — a
+    crash mid-write leaves the previous version (or nothing) behind, never
+    a torn directory. ``lock`` (if given) is held only around the swap, so
+    slow serialization never serializes against readers.
+
+    Shared by checkpoints and state migrations (repro.state.migrator): both
+    need the same "either the old snapshot or the new one, never half"
+    guarantee.
+    """
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):  # stale tmp from a crashed writer
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    try:
+        yield tmp
+    except BaseException:
+        # failed write (disk full, serde error): monotonically-increasing
+        # step/seq names mean this path is never retried, so the tmp would
+        # leak forever if left for the entry-time sweep
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    with lock if lock is not None else contextlib.nullcontext():
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
 
 
 def _to_numpy(x) -> np.ndarray:
@@ -69,26 +100,21 @@ class CheckpointManager:
         return os.path.join(self.directory, f"step_{step:010d}")
 
     def _write(self, step: int, host: list, meta: dict) -> None:
-        final = self._path(step)
-        tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        arrays = {f"a{i}": arr for i, (_, arr, _) in enumerate(host)}
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        manifest = {
-            "step": step,
-            "time": time.time(),
-            "leaves": [
-                {"path": path, "index": i, "dtype": dt, "shape": list(arr.shape)}
-                for i, (path, arr, dt) in enumerate(host)
-            ],
-            "meta": meta,
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        with atomic_dir(self._path(step), lock=self._lock) as tmp:
+            arrays = {f"a{i}": arr for i, (_, arr, _) in enumerate(host)}
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "leaves": [
+                    {"path": path, "index": i, "dtype": dt, "shape": list(arr.shape)}
+                    for i, (path, arr, dt) in enumerate(host)
+                ],
+                "meta": meta,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
         with self._lock:
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)  # atomic commit
             self._gc()
 
     def _gc(self) -> None:

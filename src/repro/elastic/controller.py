@@ -186,6 +186,7 @@ class ElasticController:
         """Idempotent absolute actuator (the arbiter's grant callback):
         grow/shrink extension pilots until ``n`` resources serve the
         consumer. Returns the count actually reached."""
+        t0 = time.perf_counter()
         with self._lock:
             before = self.devices
             if n > before:
@@ -206,6 +207,12 @@ class ElasticController:
             self.bus.publish("elastic.event",
                              1.0 if after > before else -1.0, t=now, **labels)
             self.bus.publish("elastic.devices", after, t=now, **labels)
+            # grow/shrink is synchronous through plugin.extend/shrink ->
+            # stream.rescale, so this includes any keyed-state migration the
+            # grant triggered (quiesce + snapshot + restore) — the end-to-end
+            # disruption cost of the scaling action
+            self.bus.publish("elastic.actuation_ms",
+                             (time.perf_counter() - t0) * 1e3, t=now, **labels)
         return after
 
     def _apply(self, decision: ScalingDecision, snap: MetricsSnapshot, now: float) -> ScalingDecision:
@@ -223,6 +230,7 @@ class ElasticController:
             want = n * step
         if want <= 0:
             return HOLD
+        t0 = time.perf_counter()
         if decision.scale_up:
             want = min(want, self.service.pool.free_devices)
             if self.config.max_devices is not None:
@@ -243,6 +251,10 @@ class ElasticController:
         event = ScalingEvent(now, action, after - before, before, after, decision.reason)
         self.events.record(event)
         self.bus.publish("elastic.event", 1.0 if action == "scale_up" else -1.0,
+                         t=now, **self._labels())
+        # includes any keyed-state migration the rescale triggered (see
+        # scale_to) — direct mode pays the same disruption cost
+        self.bus.publish("elastic.actuation_ms", (time.perf_counter() - t0) * 1e3,
                          t=now, **self._labels())
         return ScalingDecision(after - before, decision.reason)
 

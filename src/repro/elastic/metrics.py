@@ -15,6 +15,11 @@ Conventions (all optional — the bus is schemaless):
 * ``stream.busy_frac``       gauge — processing_delay / batch_interval
 * ``pool.devices_total``/``pool.devices_leased``/``pool.utilization`` gauges
 * ``elastic.devices``/``elastic.lag``/``elastic.decision`` — controller
+* ``elastic.actuation_ms``      gauge — wall-clock of one grow/shrink
+  actuation, *including* any keyed-state migration it triggered
+* ``state.migrated_partitions``/``state.migration_ms``/``state.bytes_moved``
+  gauges, per-stream — published by the continuous engine's StateMigrator
+  on every rescale (docs/state.md)
 """
 from __future__ import annotations
 
@@ -207,6 +212,10 @@ class MetricsSnapshot:
     #: token buckets (``broker.stall_frac`` gauge) — the broker
     #: controller's saturation signal
     broker_stall_frac: float = 0.0
+    #: duration of the last keyed-state migration (``state.migration_ms``
+    #: gauge, max over streams) — lets policies weigh rescale benefit
+    #: against the disruption it costs
+    state_migration_ms: float = 0.0
 
     @classmethod
     def capture(cls, bus: MetricsBus, pool: Any | None = None,
@@ -248,6 +257,7 @@ class MetricsSnapshot:
             util = bus.value("pool.utilization")
         busy = max(_per_stream("stream.busy_frac").values(), default=0.0)
         stall = max(_per_stream("broker.stall_frac").values(), default=0.0)
+        migr = max(_per_stream("state.migration_ms").values(), default=0.0)
         p50 = max(_per_stream("stream.latency_p50").values(), default=0.0)
         p99 = max(_per_stream("stream.latency_p99").values(), default=0.0)
         demands = _per_stream("stream.records_per_sec")
@@ -272,4 +282,5 @@ class MetricsSnapshot:
             latency_p50=p50,
             latency_p99=p99,
             broker_stall_frac=stall,
+            state_migration_ms=migr,
         )

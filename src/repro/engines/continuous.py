@@ -5,12 +5,19 @@ assigned to tumbling/sliding/session windows by their timestamps, buffered
 per (key, window), and fired when the watermark (max event time − allowed
 lateness) passes the window end. Late records are counted and dropped
 (paper §2.1: "native stream engines ... more advanced windowing").
+
+Keyed window state lives in a :class:`repro.state.PartitionedStateStore`
+(fixed ring of state partitions, consistent key hashing), so a rescale —
+extension pilots folding in or dropping out — migrates only the partitions
+whose owner changed: ``rescale()`` quiesces the record loop (state lock +
+``sync_fn`` barrier), runs the :class:`repro.state.StateMigrator`
+(snapshot -> reassign -> restore, atomic spool on disk), then fires the
+``on_rescale`` hook and resumes. See docs/state.md.
 """
 from __future__ import annotations
 
 import threading
 import time
-from collections import defaultdict
 from typing import Any, Callable
 
 from repro.broker.cluster import BrokerCluster
@@ -20,6 +27,7 @@ from repro.core.plugin import Lease, ManagerPlugin, register_plugin
 # stat record lives on the shared elastic metrics bus now; re-exported here
 # for backward compatibility
 from repro.elastic.metrics import ContinuousStats, MetricsBus
+from repro.state import DEFAULT_PARTITIONS, MigrationReport, PartitionedStateStore, StateMigrator
 from repro.streaming.windows import SessionWindow, WatermarkTracker
 
 
@@ -36,8 +44,12 @@ class ContinuousStream:
         allowed_lateness: float = 0.0,
         emit: Callable[[Any], None] | None = None,
         metrics: MetricsBus | None = None,
+        sync_fn: Callable[[], None] | None = None,
         on_rescale: Callable[[Any], Any] | None = None,
         metrics_label: str | None = None,
+        n_partitions: int = DEFAULT_PARTITIONS,
+        owners: list | None = None,
+        state_dir: str | None = None,
     ):
         self.cluster = cluster
         self.topic = topic
@@ -52,9 +64,24 @@ class ContinuousStream:
         self.metrics = metrics
         #: bus label (defaults to topic; see MicroBatchStream.metrics_label)
         self.metrics_label = metrics_label or topic
+        # the barrier that lands a processor's in-flight device work before
+        # state escapes the loop (rescale, stop) — auto-wired from a bound
+        # window_fn's ``sync`` method, same contract as MicroBatchStream
+        owner = getattr(window_fn, "__self__", None)
+        if sync_fn is None and owner is not None:
+            sync_fn = getattr(owner, "sync", None)
+        self.sync_fn = sync_fn
         # resharding hook, constructor kwarg or post-hoc attribute (both work)
         self.on_rescale: Callable[[Any], Any] | None = on_rescale
-        self._buffers: dict[tuple, list] = defaultdict(list)  # (key, window) -> msgs
+        #: partitioned keyed window state: (key, window) buffers + counters
+        self.store = PartitionedStateStore(n_partitions, owners=owners)
+        self.migrator = StateMigrator(state_dir, bus=metrics, label=self.metrics_label)
+        #: report of the most recent rescale migration (None before any)
+        self.last_migration: MigrationReport | None = None
+        # quiesce lock: the record loop holds it around ingest+fire, and
+        # rescale() takes it to snapshot/migrate — an in-flight process()
+        # call can never race a partition hand-off (regression-tested)
+        self._state_lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._fired = threading.Condition()
@@ -63,34 +90,39 @@ class ContinuousStream:
 
     def _ingest(self, msg: Message) -> None:
         ts = msg.timestamp
+        key = self.key_fn(msg)
         if self.watermarks.is_late(ts):
             self.stats.late_records += 1
+            self.store.record_late(key)
             return
         self.watermarks.observe(ts)
-        key = self.key_fn(msg)
+        self.store.observe(key, ts)
         if isinstance(self.assigner, SessionWindow):
             windows = self.assigner.assign(ts, key)
-            # session merge: fold any overlapping buffered window into the merged one
-            merged = windows[0]
-            for (k, w) in list(self._buffers):
-                if k == key and w != merged and not (w[1] <= merged[0] or w[0] >= merged[1]):
-                    self._buffers[(key, merged)].extend(self._buffers.pop((k, w)))
+            # session merge: fold any overlapping buffered window of this
+            # key into the merged one (store-side, stays within the key's
+            # partition)
+            self.store.merge_session(key, windows[0])
         else:
             windows = self.assigner.assign(ts)
         for w in windows:
-            self._buffers[(key, w)].append(msg)
+            self.store.append(key, w, msg)
         self.stats.records += 1
         self.stats.per_record_latency.append(time.time() - ts)
 
     def _fire_ready(self) -> None:
         wm = self.watermarks.watermark
-        ready = [(k, w) for (k, w) in self._buffers if w[1] <= wm]
-        for key, w in sorted(ready, key=lambda kw: kw[1][1]):
-            msgs = self._buffers.pop((key, w))
+        fired = self.store.pop_ready(wm)
+        for key, w, msgs in fired:
             out = self.window_fn(key, w, msgs)
             self.emit(out)
             self.stats.fired_windows += 1
-        if ready:
+        if fired:
+            if isinstance(self.assigner, SessionWindow):
+                # prune closed sessions from the assigner alongside their
+                # buffers — per-key session lists would otherwise grow for
+                # the lifetime of the stream
+                self.assigner.close_before(wm)
             with self._fired:
                 self._fired.notify_all()
 
@@ -99,9 +131,10 @@ class ContinuousStream:
             try:
                 msgs = self.consumer.poll(max_records=256, timeout=0.05)
                 t0 = time.monotonic()
-                for m in msgs:
-                    self._ingest(m)
-                self._fire_ready()
+                with self._state_lock:
+                    for m in msgs:
+                        self._ingest(m)
+                    self._fire_ready()
                 if msgs:
                     self.consumer.commit()
                     if self.metrics is not None:
@@ -131,6 +164,7 @@ class ContinuousStream:
         bus.publish("stream.records_per_sec", n / dt if dt > 0 else 0.0, **labels)
         bus.publish("stream.fired_windows", self.stats.fired_windows, **labels)
         bus.publish("stream.late_records", self.stats.late_records, **labels)
+        bus.publish("stream.buffered_windows", self.store.buffered_windows, **labels)
         bus.publish("stream.lag", sum(
             self.cluster.lag(self.group.group, self.topic).values()), **labels)
 
@@ -154,6 +188,18 @@ class ContinuousStream:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=5)
+        if self.sync_fn is not None:  # land in-flight device work
+            self.sync_fn()
+        # cleanup under the state lock so the spool is never yanked from
+        # under an in-flight rescale — but timed, so a wedged window_fn
+        # (loop thread outliving the join above) cannot hang teardown;
+        # worst case the tempdir outlives us, which is the pre-cleanup
+        # behavior, not a correctness loss
+        if self._state_lock.acquire(timeout=5):
+            try:
+                self.migrator.cleanup()
+            finally:
+                self._state_lock.release()
         if self._error:
             raise self._error
 
@@ -162,13 +208,34 @@ class ContinuousStream:
         stream's) — what autoscaler lag probes consume."""
         return self.cluster.lag(self.group.group, self.topic)
 
-    def rescale(self, devices: list) -> None:
-        """Notify the processor of a changed device set (extension pilots
-        added/removed). The continuous engine keeps window state host-side,
-        so unlike the micro-batch engine there is no engine-held state to
-        swap — the hook's return value is ignored."""
-        if self.on_rescale is not None:
-            self.on_rescale(devices)
+    def rescale(self, devices: list) -> MigrationReport | None:
+        """Move keyed window state onto a changed owner set (extension
+        pilots added/removed): quiesce -> snapshot -> reassign -> restore
+        -> resume. No-op (returns None) once the stream is stopped.
+
+        Blocks until any in-flight ``_ingest``/``window_fn`` call finishes
+        (the state lock serializes against the record loop) and the
+        processor's async double-buffer drains (``sync_fn``), so a
+        partition is never serialized while a window is being appended to
+        or fired from it. The ``on_rescale`` hook runs inside the quiesced
+        section, after the migration, and its return value is ignored (the
+        engine's state is the store; processor-held state is the hook's own
+        business).
+        """
+        with self._state_lock:
+            if self._stop.is_set():
+                # dead stream (plugin.cancel + extension teardown still
+                # calls in): nothing will fire again, so migrating would
+                # only waste serde work and re-create the spool stop()
+                # cleaned up — checked under the lock stop() cleans under
+                return None
+            if self.sync_fn is not None:
+                self.sync_fn()
+            report = self.migrator.migrate(self.store, list(devices))
+            self.last_migration = report
+            if self.on_rescale is not None:
+                self.on_rescale(devices)
+        return report
 
 
 @register_plugin("continuous")
@@ -218,6 +285,9 @@ class ContinuousPlugin(ManagerPlugin):
                 pass
 
     def stream(self, cluster: BrokerCluster, topic: str, **kw) -> ContinuousStream:
+        # seed the store's owner set with the pilot's current devices so the
+        # first extension only moves the partitions that actually re-home
+        kw.setdefault("owners", list(self.devices) or None)
         s = ContinuousStream(cluster, topic, **kw)
         self.streams.append(s)
         return s

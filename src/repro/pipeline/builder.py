@@ -35,7 +35,7 @@ from repro.pipeline.spec import (
 _STAGE_FIELDS = {
     "engine", "nodes", "cores_per_node", "group", "output_topic", "emits",
     "batch_interval", "max_batch_records", "backpressure", "window",
-    "priority", "share", "colocate_with",
+    "state_partitions", "priority", "share", "colocate_with",
 }
 _SOURCE_FIELDS = {
     "rate_msgs_per_s", "total_messages", "n_producers", "seed", "rate_schedule",
@@ -269,6 +269,11 @@ class Pipeline:
                 errors.append(f"stage {s.name!r}: unknown processor {s.processor!r}")
             if s.share <= 0:
                 errors.append(f"stage {s.name!r}: share must be > 0, got {s.share}")
+            if s.state_partitions < 1:
+                errors.append(
+                    f"stage {s.name!r}: state_partitions must be >= 1, "
+                    f"got {s.state_partitions}"
+                )
 
         by_stage_name = {s.name: s for s in self._stages}
         for s in self._stages:
@@ -402,6 +407,7 @@ def _stage_kwargs(s: StageSpec) -> dict:
         "batch_interval": s.batch_interval,
         "max_batch_records": s.max_batch_records,
         "backpressure": s.backpressure, "window": dict(s.window),
+        "state_partitions": s.state_partitions,
         "options": dict(s.options),
         "priority": s.priority, "share": s.share,
         "colocate_with": s.colocate_with,

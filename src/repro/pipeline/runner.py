@@ -307,8 +307,11 @@ class PipelineRun:
                 window_fn=window_fn,
                 allowed_lateness=stage.window.get("allowed_lateness", 0.0),
                 metrics=self.bus,
+                # rescale sync barrier auto-wires from a bound window_fn's
+                # .sync, same as the micro-batch engine
                 on_rescale=getattr(proc, "on_rescale", None),
                 metrics_label=label,
+                n_partitions=stage.state_partitions,
             )
         self._streams[stage.name] = stream
 

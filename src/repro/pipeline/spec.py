@@ -117,6 +117,10 @@ class StageSpec:
     # continuous knobs: {"window": "tumbling"|"sliding"|"session", "size": s,
     # "slide": s, "gap": s, "allowed_lateness": s}
     window: dict = field(default_factory=dict)
+    #: size of the keyed-state partition ring (continuous engine only) —
+    #: rescales migrate whole partitions, so more partitions = finer-grained
+    #: (but chattier) state movement; see docs/state.md
+    state_partitions: int = 64
     #: processor factory kwargs
     options: dict = field(default_factory=dict)
     elastic: ElasticSpec | None = None

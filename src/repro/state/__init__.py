@@ -1,0 +1,42 @@
+"""Partitioned keyed state for the continuous engine (docs/state.md).
+
+Keys hash onto a fixed ring of state partitions; elasticity remaps
+partitions to owners (contiguous ranges), and a grow/shrink migrates only
+the partitions whose owner changed — quiesce -> snapshot -> reassign ->
+restore, with an atomic on-disk spool. The property/chaos suites in
+``tests/test_state*.py`` hold the subsystem to: every key has exactly one
+live owner, and no ``(key, window)`` buffer is ever lost, duplicated, or
+reordered across any sequence of rescales.
+"""
+from repro.state.migrator import MigrationReport, StateMigrator
+from repro.state.partition import (
+    DEFAULT_PARTITIONS,
+    LOCAL_OWNER,
+    key_bytes,
+    moved_partitions,
+    normalize_key,
+    partition_for,
+    range_assignment,
+)
+from repro.state.store import (
+    PartitionedStateStore,
+    StatePartition,
+    deserialize_partition,
+    serialize_partition,
+)
+
+__all__ = [
+    "DEFAULT_PARTITIONS",
+    "LOCAL_OWNER",
+    "MigrationReport",
+    "PartitionedStateStore",
+    "StateMigrator",
+    "StatePartition",
+    "deserialize_partition",
+    "key_bytes",
+    "moved_partitions",
+    "normalize_key",
+    "partition_for",
+    "range_assignment",
+    "serialize_partition",
+]

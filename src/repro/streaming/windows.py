@@ -36,27 +36,53 @@ class SlidingWindow:
 
 @dataclass
 class SessionWindow:
-    """Gap-based session windows; assignment is stateful per key."""
+    """Gap-based session windows; assignment is stateful per key.
+
+    Each element opens the proto-session ``[ts, ts + gap)``; any existing
+    session of the key that *overlaps* it (half-open intervals — touching
+    exactly at the boundary starts a new session) is folded in. A key may
+    hold several concurrent sessions, so out-of-order arrivals can bridge
+    two older sessions into one — and the final session set for a key is a
+    pure interval union, independent of arrival order (property-tested in
+    tests/test_windows.py; de-facto required for rescale determinism, since
+    a migration replays buffers in canonical, not arrival, order).
+    """
 
     gap: float
-    _sessions: dict = field(default_factory=dict)  # key -> (start, end)
+    _sessions: dict = field(default_factory=dict)  # key -> [(start, end), ...]
 
     def assign(self, ts: float, key=None) -> list[Window]:
-        cur = self._sessions.get(key)
-        if cur is not None and ts < cur[1]:
-            merged = (min(cur[0], ts), max(cur[1], ts + self.gap))
-        else:
-            merged = (ts, ts + self.gap)
-        self._sessions[key] = merged
+        lo, hi = ts, ts + self.gap
+        keep = []
+        for s in self._sessions.get(key, ()):
+            if s[1] <= lo or s[0] >= hi:  # disjoint: keep as-is
+                keep.append(s)
+            else:  # overlap: absorb into the merged session
+                lo, hi = min(lo, s[0]), max(hi, s[1])
+        merged = (lo, hi)
+        keep.append(merged)
+        keep.sort()
+        self._sessions[key] = keep
         return [merged]
+
+    def sessions(self, key=None) -> list[Window]:
+        """Current (un-closed) sessions of ``key``, ordered by start."""
+        return list(self._sessions.get(key, ()))
 
     def close_before(self, watermark: float, key=None) -> list[Window]:
         closed = []
-        for k, (s, e) in list(self._sessions.items()):
-            if (key is None or k == key) and e <= watermark:
-                closed.append((s, e))
-                del self._sessions[k]
-        return closed
+        for k, sessions in list(self._sessions.items()):
+            if key is not None and k != key:
+                continue
+            done = [s for s in sessions if s[1] <= watermark]
+            if done:
+                closed.extend(done)
+                remaining = [s for s in sessions if s[1] > watermark]
+                if remaining:
+                    self._sessions[k] = remaining
+                else:
+                    del self._sessions[k]
+        return sorted(closed)
 
 
 class WatermarkTracker:

@@ -1,0 +1,126 @@
+"""Rescale chaos test (slow): random grow/shrink must be unobservable.
+
+A ContinuousStream consumes a MASS source driven through a
+RateStepScenario while a seeded chaos loop randomly submits and cancels
+extension pilots mid-stream — every extend/shrink quiesces the record
+loop and migrates the re-homed state partitions through the full serde
+round trip. The run must fire the exact same windows with bit-identical
+per-window aggregates as a static-resource baseline.
+
+Determinism requires logical event time (wall-clock stamps differ across
+runs): the source overrides ``make_timestamp``, and a single topic
+partition + single keyed producer keep arrival order identical, so every
+``(key, window)`` buffer accumulates the same float64 values in the same
+order — any loss, duplication, or reorder during migration shows up as a
+sum mismatch.
+"""
+import random
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import PilotComputeService
+from repro.miniapps import RateStepScenario, SourceConfig
+from repro.miniapps.mass import StreamSource
+from repro.streaming import TumblingWindow
+
+N_MSGS = 1500
+DT = 0.01  # logical seconds between events
+WINDOW = 0.1  # -> 10 msgs per window span
+N_KEYS = 5
+BASE_TS = 1000.0
+
+# spans [BASE_TS + j*W, +W): the last span never closes (watermark stops at
+# the final event), and every closed span holds 10 msgs = 2 per key
+N_SPANS = N_MSGS * DT / WINDOW
+EXPECTED_WINDOWS = (int(N_SPANS) - 1) * N_KEYS
+
+
+class _DeterministicSource(StreamSource):
+    """Payload and event time are pure functions of the message index."""
+
+    def make_message(self, rng, i):
+        return np.array([i % N_KEYS, float(i) * 1.25], dtype=np.float64)
+
+    def make_timestamp(self, rng, i):
+        return BASE_TS + i * DT
+
+
+def _window_fn(key, w, msgs):
+    vals = np.array([m.value[1] for m in msgs], dtype=np.float64)
+    # np.sum order-sensitivity is the point: a migration that reorders a
+    # buffer produces different low bits
+    return key, w, float(np.sum(vals)), len(msgs)
+
+
+def _run(chaos_seed: int | None):
+    svc = PilotComputeService(devices=list(range(10)))
+    results: dict = {}
+    migrations = 0
+    try:
+        kafka = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"})
+        cluster = kafka.get_context()
+        cluster.create_topic("chaos", 1)
+        flink = svc.submit_pilot(
+            {"number_of_nodes": 1, "cores_per_node": 2, "type": "flink"})
+        stream = flink.get_context().stream(
+            cluster, "chaos", group="g",
+            assigner=TumblingWindow(WINDOW),
+            window_fn=_window_fn,
+            key_fn=lambda m: int(m.value[0]),
+            emit=lambda out: results.__setitem__((out[0], out[1]), (out[2], out[3])),
+        )
+        stream.start()
+        source = _DeterministicSource(cluster, SourceConfig(
+            "chaos", total_messages=N_MSGS, n_producers=1, keyed=True, seed=7))
+        scenario = RateStepScenario(
+            source, [(0.4, 1000.0), (0.4, 4000.0), (0.4, 1800.0)], loop=True)
+        source.start()
+        scenario.start()
+
+        rng = random.Random(chaos_seed) if chaos_seed is not None else None
+        extensions: list = []
+        deadline = time.monotonic() + 60
+        while stream.stats.fired_windows < EXPECTED_WINDOWS:
+            assert time.monotonic() < deadline, (
+                f"{stream.stats.fired_windows}/{EXPECTED_WINDOWS} windows fired")
+            if rng is None:
+                time.sleep(0.02)
+                continue
+            # random mid-stream grow/shrink: each one quiesces + migrates
+            if extensions and (len(extensions) >= 3 or rng.random() < 0.5):
+                extensions.pop(rng.randrange(len(extensions))).cancel()
+            else:
+                extensions.append(svc.submit_pilot({
+                    "number_of_nodes": 1,
+                    "cores_per_node": rng.randint(1, 2),
+                    "type": "flink",
+                    "parent": flink,
+                }))
+            time.sleep(rng.uniform(0.01, 0.06))
+        scenario.stop()
+        source.stop()
+        stream.stop()
+        fired = stream.stats.fired_windows
+        late = stream.stats.late_records
+        migrations = len(stream.migrator.reports)
+    finally:
+        svc.cancel()
+    return results, fired, late, migrations
+
+
+@pytest.mark.slow
+def test_windows_identical_under_random_rescale():
+    base_results, base_fired, base_late, _ = _run(chaos_seed=None)
+    chaos_results, chaos_fired, chaos_late, migrations = _run(chaos_seed=20260729)
+
+    assert base_late == chaos_late == 0
+    assert migrations >= 3, "chaos run never actually migrated state"
+    assert chaos_fired == base_fired == EXPECTED_WINDOWS
+    # bit-identical: same window set, and exact float equality on sums
+    assert chaos_results.keys() == base_results.keys()
+    for kw, (total, count) in base_results.items():
+        c_total, c_count = chaos_results[kw]
+        assert c_count == count, f"window {kw}: {c_count} != {count} records"
+        assert c_total == total, f"window {kw}: aggregate drifted"

@@ -118,6 +118,22 @@ def test_builder_rejects_topic_cycles_and_emit_mismatches():
     assert "needs emits=True" in str(ei.value)
 
 
+def test_builder_validates_state_partitions_at_build_time():
+    with pytest.raises(PipelineValidationError) as ei:
+        (Pipeline.named("sp").topic("a")
+         .stage("s", topic="a", processor="count_msgs", engine="continuous",
+                window={"window": "tumbling", "size": 1.0}, state_partitions=0)
+         .build())
+    assert "state_partitions must be >= 1" in str(ei.value)
+    # the default and explicit sizes round-trip through the spec
+    spec = (Pipeline.named("sp2").topic("a")
+            .stage("s", topic="a", processor="count_msgs", engine="continuous",
+                   window={"window": "tumbling", "size": 1.0}, state_partitions=16)
+            .build())
+    assert spec.stage("s").state_partitions == 16
+    assert PipelineSpec.from_json(spec.to_json()) == spec
+
+
 def test_builder_validates_policy_params_at_build_time():
     with pytest.raises(PipelineValidationError) as ei:
         (Pipeline.named("pp").topic("a")

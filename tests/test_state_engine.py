@@ -1,0 +1,414 @@
+"""Always-run tests for repro.state + the continuous engine's use of it.
+
+Mirror of the hypothesis suite in tests/test_state.py (which skips where
+hypothesis isn't installed) plus what properties can't express: the engine
+integration (rescale mid-stream fires the same windows), the automatic
+migration on extension-pilot grow/shrink, the migration gauges, and the
+regression test for the quiesce race — ``rescale()`` used to run while a
+``window_fn`` call was in flight.
+"""
+import os
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.broker import Producer
+from repro.broker.consumer import Message
+from repro.core import PilotComputeService
+from repro.elastic import MetricsBus, MetricsSnapshot
+from repro.state import (
+    LOCAL_OWNER,
+    PartitionedStateStore,
+    StateMigrator,
+    deserialize_partition,
+    moved_partitions,
+    partition_for,
+    range_assignment,
+    serialize_partition,
+)
+from repro.streaming import SessionWindow, TumblingWindow
+
+
+# -- partitioner / assignment (deterministic mirror of the property suite) ----
+
+
+def test_partitioner_stability_and_numeric_folding():
+    for key in [None, True, 0, -7, 2**70, 3.5, -0.0, "k", b"k", ("a", 1), ()]:
+        p = partition_for(key, 64)
+        assert 0 <= p < 64 and partition_for(key, 64) == p
+    assert partition_for(3, 64) == partition_for(3.0, 64) == partition_for(np.int64(3), 64)
+    assert partition_for(True, 64) == partition_for(1, 64)
+    assert partition_for(2**53, 64) == partition_for(float(2**53), 64)
+    assert partition_for(-0.0, 64) == partition_for(0, 64)
+
+
+def test_range_assignment_covers_ring_exactly_once():
+    for n in (1, 7, 64):
+        for k in (1, 2, 3, 5, n + 3):
+            a = range_assignment(n, [f"o{i}" for i in range(k)])
+            assert sorted(a) == list(range(n))
+    with pytest.raises(ValueError):
+        range_assignment(8, [])
+
+
+def test_grow_shrink_moves_only_the_diff():
+    old = range_assignment(64, [0, 1])
+    new = range_assignment(64, [0, 1, 2])
+    moved = moved_partitions(old, new)
+    assert moved and len(moved) < 64  # strictly partial movement
+    assert all(old[p] != new[p] for p in moved)
+    assert moved_partitions(new, new) == []
+
+
+def _state_of(store):
+    return {kw: [(m.offset, m.timestamp) for m in msgs] for kw, msgs in store.items()}
+
+
+def test_seeded_migration_fuzz_no_loss_no_dup():
+    """The core rescale-safety invariant, driven by stdlib random so it runs
+    in every environment (the hypothesis twin lives in test_state.py)."""
+    for seed in range(30):
+        rnd = random.Random(seed)
+        n = rnd.choice([1, 8, 32, 64])
+        store = PartitionedStateStore(n)
+        for j in range(rnd.randint(1, 50)):
+            key = rnd.choice([None, j % 7, f"k{j % 5}", (j % 3, "x"), float(j % 4), b"b"])
+            w = (float(j % 5), float(j % 5) + 1.0)
+            store.append(key, w, Message(0, j, 0.5 + j, np.array([float(j)])))
+        snap = _state_of(store)
+        migrator = StateMigrator()
+        for _ in range(rnd.randint(1, 8)):
+            owners = rnd.sample(range(10), rnd.randint(1, 6))
+            report = migrator.migrate(store, owners)
+            assert _state_of(store) == snap  # nothing lost/duplicated/reordered
+            for (key, _w) in snap:  # exactly one live owner per key
+                assert store.owner_of(key) in owners
+            for pid, part in store.partitions.items():  # keys in home partitions
+                for (k, _w) in part.buffers:
+                    assert partition_for(k, n) == pid
+            assert set(report.moved) <= set(range(n))
+        migrator.cleanup()
+
+
+def test_unmoved_partitions_keep_identity():
+    store = PartitionedStateStore(32, owners=[0, 1])
+    for j in range(40):
+        store.append(f"k{j}", (0.0, 1.0), Message(0, j, 0.5, float(j)))
+    before = dict(store.partitions)
+    mig = StateMigrator()
+    report = mig.migrate(store, [0, 1, 2])
+    assert report.moved  # something moved...
+    for pid in range(32):
+        if pid in report.moved:
+            assert store.partitions[pid] is not before[pid]  # full serde round trip
+        else:
+            assert store.partitions[pid] is before[pid]  # ...the rest untouched
+    mig.cleanup()
+
+
+def test_partition_counters_count_records_not_window_assignments():
+    store = PartitionedStateStore(8)
+    msg = Message(0, 0, 1.5, 1.0)
+    store.observe("k", msg.timestamp)
+    store.append("k", (0.0, 2.0), msg)
+    store.append("k", (1.0, 3.0), msg)  # sliding: same record, two windows
+    part = store.partitions[store.partition_of("k")]
+    assert part.records == 1  # one record...
+    assert part.buffered_records == 2  # ...buffered twice
+    assert part.max_event_time == 1.5
+
+
+def test_serde_roundtrip_counters_and_values():
+    store = PartitionedStateStore(4)
+    store.append("k", (0.0, 1.0), Message(1, 7, 0.5, np.arange(6, dtype=np.float32)))
+    store.append("k", (0.0, 1.0), Message(1, 8, 0.6, {"a": [1, 2], "b": "x"}))
+    store.append(("t", 2), (1.0, 2.0), Message(0, 9, 1.5, (1, "y", b"z")))
+    store.record_late("k")
+    pid = store.partition_of("k")
+    part = deserialize_partition(serialize_partition(store.partitions[pid]))
+    assert part.records == store.partitions[pid].records
+    assert part.late_records == store.partitions[pid].late_records
+    assert part.max_event_time == store.partitions[pid].max_event_time
+    msgs = part.buffers[("k", (0.0, 1.0))]
+    assert msgs[0].value.dtype == np.float32 and np.array_equal(msgs[0].value, np.arange(6, dtype=np.float32))
+    assert msgs[1].value == {"a": [1, 2], "b": "x"}
+    pid2 = store.partition_of(("t", 2))
+    part2 = deserialize_partition(serialize_partition(store.partitions[pid2]))
+    assert part2.buffers[(("t", 2), (1.0, 2.0))][0].value == (1, "y", b"z")
+
+
+def test_session_merge_order_is_migration_invariant():
+    """Folding overlapping session buffers must produce the same message
+    order whether or not a migration (which rebuilds buffers in canonical
+    serde order) happened in between — an order-sensitive window_fn would
+    otherwise see rescale-dependent aggregates."""
+    def build():
+        s = PartitionedStateStore(8)
+        # two disjoint sessions arriving out of order, then a bridge
+        s.append("k", (25.0, 35.0), Message(0, 2, 25.0, np.array([2.0])))
+        s.append("k", (0.0, 18.0), Message(0, 0, 0.0, np.array([0.5])))
+        s.append("k", (0.0, 18.0), Message(0, 1, 8.0, np.array([1.5])))
+        return s
+    plain = build()
+    plain.merge_session("k", (0.0, 35.0))
+    migrated = build()
+    mig = StateMigrator()
+    mig.migrate(migrated, [0, 1])  # buffers -> canonical order
+    mig.cleanup()
+    migrated.merge_session("k", (0.0, 35.0))
+    order = lambda s: [m.offset for m in s.partitions[s.partition_of("k")].buffers[("k", (0.0, 35.0))]]
+    assert order(plain) == order(migrated) == [0, 1, 2]
+
+
+def test_arbitrary_hashable_keys_route_and_migrate():
+    """The engine's key_fn contract predates repro.state: any hashable key
+    must keep working (routing + serde), not kill the record loop."""
+    exotic = [frozenset({1, 2}), frozenset(), ("nested", frozenset({"x"}))]
+    store = PartitionedStateStore(16)
+    for j, key in enumerate(exotic):
+        assert store.partition_of(key) == store.partition_of(key)
+        store.append(key, (0.0, 1.0), Message(0, j, 0.5, float(j)))
+    snap = _state_of(store)
+    mig = StateMigrator()
+    mig.migrate(store, [0, 1, 2])
+    mig.cleanup()
+    assert _state_of(store) == snap  # pickled keys round-trip to equal objects
+    fired = store.pop_ready(1.0)
+    assert sorted(m for (_, _, msgs) in fired for m in [msgs[0].offset]) == [0, 1, 2]
+
+
+def test_structured_dtype_values_survive_migration():
+    """Structured arrays must keep field metadata (they bypass the
+    columnar fast path, whose dtype.str would flatten them to raw void)."""
+    rec = np.zeros(3, dtype=[("a", "<f4"), ("b", "<i4")])
+    rec["a"] = [1.5, 2.5, 3.5]
+    rec["b"] = [1, 2, 3]
+    store = PartitionedStateStore(8)
+    store.append("k", (0.0, 1.0), Message(0, 0, 0.5, rec))
+    mig = StateMigrator()
+    mig.migrate(store, [0, 1])
+    mig.cleanup()
+    ((_, msgs),) = list(store.items())
+    got = msgs[0].value
+    assert got.dtype == rec.dtype
+    assert np.array_equal(got["a"], rec["a"]) and np.array_equal(got["b"], rec["b"])
+
+
+def test_empty_owner_set_falls_back_to_local():
+    store = PartitionedStateStore(8)
+    assert store.owners == [LOCAL_OWNER]
+    StateMigrator().migrate(store, [])
+    assert store.owners == [LOCAL_OWNER]
+
+
+def test_migrator_spool_is_atomic_and_bounded(tmp_path):
+    store = PartitionedStateStore(16, owners=[0])
+    for j in range(20):
+        store.append(f"k{j}", (0.0, 1.0), Message(0, j, 0.5, float(j)))
+    mig = StateMigrator(directory=str(tmp_path), keep_last=2)
+    for owners in ([0, 1], [0, 1, 2], [0], [0, 3]):
+        mig.migrate(store, owners)
+    names = sorted(os.listdir(tmp_path))
+    assert all(not n.endswith(".tmp") for n in names)  # every spool committed
+    assert len([n for n in names if n.startswith("migration_")]) <= 2  # gc'd
+    mig.cleanup()
+    assert os.path.isdir(tmp_path)  # caller-provided directory is kept
+
+
+def test_migrator_cleans_up_its_own_tempdir():
+    store = PartitionedStateStore(8, owners=[0])
+    store.append("k", (0.0, 1.0), Message(0, 0, 0.5, 1.0))
+    mig = StateMigrator()  # no directory: mkdtemp on first migrate
+    mig.migrate(store, [0, 1])
+    spool_root = mig.directory
+    assert spool_root is not None and os.path.isdir(spool_root)
+    mig.cleanup()
+    assert not os.path.exists(spool_root)
+    mig.cleanup()  # idempotent
+    mig.migrate(store, [0])  # and usable again afterwards
+
+
+def test_migrator_publishes_gauges_and_snapshot_sees_them():
+    bus = MetricsBus()
+    store = PartitionedStateStore(16, owners=[0])
+    for j in range(10):
+        store.append(j, (0.0, 1.0), Message(0, j, 0.5, float(j)))
+    mig = StateMigrator(bus=bus, label="s1")
+    report = mig.migrate(store, [0, 1])
+    mig.cleanup()
+    assert bus.value("state.migrated_partitions", stream="s1") == len(report.moved)
+    assert bus.value("state.migration_ms", stream="s1") == pytest.approx(report.duration_ms)
+    assert bus.value("state.bytes_moved", stream="s1") == report.bytes_moved
+    snap = MetricsSnapshot.capture(bus, stream="s1")
+    assert snap.state_migration_ms == pytest.approx(report.duration_ms)
+
+
+# -- continuous engine integration ------------------------------------------------
+
+
+@pytest.fixture
+def svc():
+    s = PilotComputeService(devices=list(range(8)))
+    yield s
+    s.cancel()
+
+
+def _continuous(svc, topic="st", *, bus=None, cores=2, **kw):
+    kafka = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"})
+    cluster = kafka.get_context()
+    cluster.create_topic(topic, 1)  # single partition: in-order event time
+    flink = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": cores, "type": "flink"})
+    outs = []
+    stream = flink.get_context().stream(
+        cluster, topic, group="g",
+        assigner=kw.pop("assigner", TumblingWindow(1.0)),
+        window_fn=kw.pop("window_fn", lambda k, w, msgs: (k, w, sum(float(m.value[0]) for m in msgs), len(msgs))),
+        key_fn=lambda m: int(m.value[1]) % 3,
+        emit=outs.append, metrics=bus, **kw,
+    )
+    return cluster, flink, stream, outs
+
+
+def _send(cluster, topic, lo, hi):
+    prod = Producer(cluster, topic, serializer="npy")
+    for i in range(lo, hi):
+        prod.send(np.array([float(i), i]), timestamp=100.0 + i * 0.2)
+
+
+def test_rescale_mid_stream_fires_identical_windows(svc):
+    """Grow + shrink between windows changes nothing observable: same fired
+    set, same aggregates, and the moved buffers took the serde round trip."""
+    bus = MetricsBus()
+    cluster, flink, stream, outs = _continuous(svc, bus=bus)
+    stream.start()
+    _send(cluster, "st", 0, 30)
+    stream.await_windows(15, timeout=20)
+    report = stream.rescale([0, 1, 2, 3])
+    assert report.moved  # buffered state actually re-homed
+    assert stream.store.owners == [0, 1, 2, 3]
+    _send(cluster, "st", 30, 40)
+    stream.await_windows(21, timeout=20)
+    stream.rescale([0, 1])
+    stream.stop()
+    assert stream.stats.records == 40 and stream.stats.late_records == 0
+    # reference run, no rescale
+    svc2 = PilotComputeService(devices=list(range(8)))
+    try:
+        cluster2, _, s2, outs2 = _continuous(svc2, topic="st2")
+        s2.start()
+        _send(cluster2, "st2", 0, 40)
+        s2.await_windows(21, timeout=20)
+        s2.stop()
+    finally:
+        svc2.cancel()
+    assert sorted(outs, key=str) == sorted(outs2, key=str)
+    assert bus.value("state.migration_ms", stream="st") > 0.0
+
+
+def test_extension_pilot_triggers_migration_automatically(svc):
+    """paper Listing 4: submit_pilot(parent=engine) -> plugin.extend ->
+    stream.rescale -> StateMigrator, no user code in the loop."""
+    cluster, flink, stream, _ = _continuous(svc)
+    stream.start()
+    _send(cluster, "st", 0, 10)
+    stream.await_windows(3, timeout=20)
+    assert stream.last_migration is None
+    ext = svc.submit_pilot(
+        {"number_of_nodes": 1, "cores_per_node": 2, "type": "flink", "parent": flink})
+    assert stream.last_migration is not None
+    assert len(stream.store.owners) == 4  # 2 base + 2 extension devices
+    ext.cancel()  # shrink migrates back
+    assert len(stream.migrator.reports) == 2
+    assert len(stream.store.owners) == 2
+    spool_root = stream.migrator.directory
+    assert spool_root is not None and os.path.isdir(spool_root)
+    stream.stop()
+    assert not os.path.exists(spool_root)  # tempdir spools die with the stream
+    # teardown-order calls (plugin shrink after stop) must not migrate or
+    # resurrect the spool on a dead stream
+    assert stream.rescale([0]) is None
+    assert stream.migrator.directory is None
+
+
+def test_rescale_quiesces_inflight_window_fn(svc):
+    """Regression: rescale() used to run concurrently with an in-flight
+    window_fn/process call — it must block until the fire completes."""
+    entered, release = threading.Event(), threading.Event()
+    finished_at, rescaled_at = [], []
+
+    def slow_window(k, w, msgs):
+        entered.set()
+        release.wait(10)
+        finished_at.append(time.monotonic())
+        return len(msgs)
+
+    cluster, flink, stream, _ = _continuous(svc, window_fn=slow_window)
+    stream.start()
+    _send(cluster, "st", 0, 10)  # several closed windows -> slow_window runs
+    assert entered.wait(10)
+
+    t = threading.Thread(
+        target=lambda: (stream.rescale([0, 1, 2]), rescaled_at.append(time.monotonic())),
+        daemon=True,
+    )
+    t.start()
+    time.sleep(0.3)
+    assert not rescaled_at, "rescale() returned while a window_fn call was in flight"
+    release.set()
+    t.join(10)
+    assert rescaled_at and finished_at
+    assert rescaled_at[0] >= finished_at[0]
+    stream.stop()
+
+
+def test_rescale_runs_sync_barrier_before_migrating(svc):
+    """An async (double-buffered) processor's sync() must land in-flight
+    device work before its partitions are serialized — auto-wired from a
+    bound window_fn, mirroring MicroBatchStream."""
+    calls = []
+
+    class Proc:
+        def process(self, k, w, msgs):
+            return len(msgs)
+
+        def sync(self):
+            calls.append("sync")
+
+    proc = Proc()
+    cluster, flink, stream, _ = _continuous(svc, window_fn=proc.process)
+    assert stream.sync_fn is not None  # auto-wired
+    stream.start()
+    stream.rescale([0, 1])
+    assert calls == ["sync"]
+    stream.stop()
+
+
+def test_session_windows_survive_migration(svc):
+    """Session state (mergeable windows) migrates like any other buffer."""
+    outs = []
+    cluster, flink, stream, _ = _continuous(
+        svc, assigner=SessionWindow(gap=1.0),
+        window_fn=lambda k, w, msgs: (k, w, len(msgs)),
+    )
+    stream.emit = outs.append
+    stream.start()
+    prod = Producer(cluster, "st", serializer="npy")
+    # two bursts per key separated by > gap; second burst closes the first
+    for i in range(6):
+        prod.send(np.array([float(i), i]), timestamp=100.0 + i * 0.1)
+    time.sleep(0.3)
+    stream.rescale([0, 1, 2])  # sessions still open: they ride the migration
+    for i in range(6):
+        prod.send(np.array([float(i), i]), timestamp=110.0 + i * 0.1)
+    stream.await_windows(3, timeout=20)
+    # fired sessions are pruned from the assigner (unbounded-growth guard);
+    # only the still-open second-burst sessions remain
+    for key in range(3):
+        assert all(s[0] >= 110.0 for s in stream.assigner.sessions(key))
+    stream.stop()
+    fired = {(k, w): n for k, w, n in outs}
+    assert len(fired) == 3  # one merged session per key fired
+    assert all(n == 2 for n in fired.values())

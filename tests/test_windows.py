@@ -1,5 +1,6 @@
 """Window-assigner + watermark properties (hypothesis)."""
 import math
+import random
 
 import pytest
 
@@ -39,10 +40,21 @@ def test_session_windows_merge_within_gap():
     s.assign(0.0, key="k")
     (w,) = s.assign(5.0, key="k")  # within gap -> merged
     assert w[0] == 0.0 and w[1] == 15.0
-    (w2,) = s.assign(100.0, key="k")  # new session
+    (w2,) = s.assign(100.0, key="k")  # new session; the old one stays live
     assert w2[0] == 100.0
+    assert s.sessions("k") == [(0.0, 15.0), (100.0, 110.0)]
     closed = s.close_before(90.0, key="k")
-    assert closed == []  # active session replaced the old one
+    assert closed == [(0.0, 15.0)]  # watermark closes it; the new one stays
+    assert s.sessions("k") == [(100.0, 110.0)]
+
+
+def test_session_out_of_order_bridges_two_sessions():
+    s = SessionWindow(gap=10.0)
+    s.assign(0.0, key="k")
+    s.assign(25.0, key="k")  # disjoint second session
+    (w,) = s.assign(8.0, key="k")  # late arrival overlaps both -> one session
+    assert w == (0.0, 35.0)
+    assert s.sessions("k") == [(0.0, 35.0)]
 
 
 def test_watermark_lateness():
@@ -62,3 +74,98 @@ def test_watermark_monotonic(times):
         t.observe(ts)
         assert t.watermark >= prev
         prev = t.watermark
+
+
+# -- coverage: every timestamp lands in >= 1 window, for every assigner ------
+
+
+@given(ts_strategy, st.floats(0.1, 100.0))
+@settings(max_examples=100, deadline=None)
+def test_tumbling_covers_every_timestamp(ts, size):
+    ws = TumblingWindow(size).assign(ts)
+    assert len(ws) >= 1 and all(w[0] <= ts < w[1] for w in ws)
+
+
+@given(ts_strategy, st.floats(0.1, 50.0), st.floats(0.1, 50.0))
+@settings(max_examples=100, deadline=None)
+def test_sliding_covers_every_timestamp(ts, slide, extra):
+    # size >= slide but NOT necessarily an integer multiple — the gapless
+    # guarantee must not depend on aligned geometry
+    size = slide + extra
+    ws = SlidingWindow(size, slide).assign(ts)
+    assert len(ws) >= 1 and all(w[0] <= ts < w[1] for w in ws)
+
+
+@given(ts_strategy, st.floats(0.1, 100.0))
+@settings(max_examples=100, deadline=None)
+def test_session_covers_every_timestamp(ts, gap):
+    (w,) = SessionWindow(gap).assign(ts, key="k")
+    assert w[0] <= ts < w[1]
+
+
+# -- session merge: order-insensitive ---------------------------------------
+
+
+@given(
+    st.lists(st.floats(0.0, 1e4, allow_nan=False), min_size=1, max_size=16),
+    st.floats(0.1, 50.0),
+    st.integers(0, 2**32 - 1),
+)
+@settings(max_examples=150, deadline=None)
+def test_session_merge_order_insensitive(times, gap, seed):
+    """The final session set of a key is the interval union of its
+    [ts, ts+gap) proto-sessions — a pure function of the SET of
+    timestamps. (Rescale determinism leans on this: migrations replay
+    buffers in canonical, not arrival, order.)"""
+    a = SessionWindow(gap)
+    for ts in times:
+        a.assign(ts, key="k")
+    perm = list(times)
+    random.Random(seed).shuffle(perm)
+    b = SessionWindow(gap)
+    for ts in perm:
+        b.assign(ts, key="k")
+    assert a.sessions("k") == b.sessions("k")
+
+
+@given(
+    st.lists(st.floats(0.0, 1e4, allow_nan=False), min_size=1, max_size=16),
+    st.floats(0.1, 50.0),
+    st.floats(0.0, 1.2e4, allow_nan=False),
+)
+@settings(max_examples=100, deadline=None)
+def test_session_close_before_partitions_sessions(times, gap, wm):
+    s = SessionWindow(gap)
+    for ts in times:
+        s.assign(ts, key="k")
+    before = s.sessions("k")
+    closed = s.close_before(wm, key="k")
+    assert all(e <= wm for (_, e) in closed)
+    assert all(e > wm for (_, e) in s.sessions("k"))
+    assert sorted(closed + s.sessions("k")) == before  # nothing lost
+
+
+# -- allowed lateness: the boundary is exact, not off-by-one -----------------
+
+
+@given(st.integers(0, 10**9), st.integers(0, 10**6))
+@settings(max_examples=100, deadline=None)
+def test_allowed_lateness_boundary_exact(T, lateness):
+    """Integer-valued floats subtract exactly, so the boundary record at
+    ts == watermark must be accepted and the previous float rejected —
+    an off-by-one (``<=`` vs ``<``) fails one of these two."""
+    t = WatermarkTracker(allowed_lateness=float(lateness))
+    t.observe(float(T))
+    wm = float(T - lateness)
+    assert t.watermark == wm
+    assert not t.is_late(wm)  # exactly-at-watermark is NOT late
+    assert t.is_late(math.nextafter(wm, -math.inf))  # one ulp earlier is
+
+
+@given(st.floats(-1e9, 1e9, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_zero_lateness_rejects_nothing_at_watermark(ts):
+    t = WatermarkTracker()
+    t.observe(ts)
+    assert not t.is_late(ts)  # a re-delivery of the max-ts record is on time
+    assert t.is_late(math.nextafter(ts, -math.inf))
