@@ -40,6 +40,13 @@ class ElasticConfig:
     max_devices: int | None = None  # None = whatever the pool can give
     devices_per_step: int = 1  # lease size of one extension pilot
     cooldown: float = 1.0  # seconds between scaling actions
+    #: migration-cost gate (None = off): when the last keyed-state
+    #: migration took more than this fraction of a reconcile interval, the
+    #: controller holds further rescales until the cost has amortized —
+    #: i.e. until ``cost / time_since_migration <= migration_cost_frac``.
+    #: The deferral decays on its own (time passes), so an expensive
+    #: migration delays scaling; it can never wedge it permanently.
+    migration_cost_frac: float | None = None
 
 
 class ElasticController:
@@ -137,6 +144,11 @@ class ElasticController:
         # adding up_stable*interval of latency after every cooldown collision
         if now - self._last_action_t < self.config.cooldown:
             applied = HOLD
+        elif self._migration_deferred(now):
+            # the last state migration was expensive relative to the
+            # reconcile cadence: let it amortize before paying for another
+            self.bus.publish("elastic.rescale_deferred", 1.0, t=now, **labels)
+            applied = HOLD
         elif self.arbiter is not None:
             applied = self._submit_demand(self.policy.decide(snap), now)
         else:
@@ -147,6 +159,27 @@ class ElasticController:
 
     def _labels(self) -> dict:
         return {} if self.stream is None else {"stream": self.stream}
+
+    def _migration_deferred(self, now: float) -> bool:
+        """True while the last keyed-state migration is still amortizing
+        (``MetricsSnapshot.state_migration_ms`` consumer). The gauge is
+        latched — the engine republishes the *last* migration's cost
+        forever — so the gate keys off the sample's timestamp: defer only
+        until ``cost / (now - sample.t)`` drops to ``migration_cost_frac``.
+        """
+        frac = self.config.migration_cost_frac
+        if frac is None or frac <= 0:
+            return False
+        if self.stream is None:
+            sample = self.bus.latest("state.migration_ms")
+        else:
+            sample = self.bus.latest("state.migration_ms", stream=self.stream)
+        if sample is None:
+            return False
+        cost_s = sample.value / 1e3
+        if cost_s <= frac * self.config.interval:
+            return False  # cheap migration: never worth deferring for
+        return now < sample.t + cost_s / frac
 
     def _desired(self, decision: ScalingDecision) -> int | None:
         """Fold a policy delta into an absolute resource target (the same

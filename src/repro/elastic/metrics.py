@@ -20,6 +20,15 @@ Conventions (all optional — the bus is schemaless):
 * ``state.migrated_partitions``/``state.migration_ms``/``state.bytes_moved``
   gauges, per-stream — published by the continuous engine's StateMigrator
   on every rescale (docs/state.md)
+* ``workers.alive``/``workers.restarts`` gauges, per-stream — the mp
+  executor's worker-process health (docs/workers.md)
+* ``stream.latency_p50``/``stream.latency_p99`` gauges (seconds) — rolling
+  per-batch compute-latency quantiles. The micro-batch engine publishes
+  per-stream; the continuous engine's mp executor publishes per *worker*
+  (labels ``stream`` + ``worker``) and then a per-stream aggregate, so
+  per-stream readers resolve to the aggregate
+* ``elastic.rescale_deferred`` — the controller held a tick because the
+  last state migration is still amortizing (``migration_cost_frac``)
 """
 from __future__ import annotations
 

@@ -29,9 +29,30 @@ from repro.core.plugin import Lease, ManagerPlugin, register_plugin
 from repro.elastic.metrics import ContinuousStats, MetricsBus
 from repro.state import DEFAULT_PARTITIONS, MigrationReport, PartitionedStateStore, StateMigrator
 from repro.streaming.windows import SessionWindow, WatermarkTracker
+from repro.workers.proto import OP_APPEND, OP_LATE, OP_MERGE, OP_OBSERVE
+from repro.workers.runtime import WorkerRuntime
+
+EXECUTORS = ("inline", "mp")
 
 
 class ContinuousStream:
+    """``executor`` selects where partition state mutates and windows fire:
+
+    * ``"inline"`` (default) — in this process, in the record-loop thread
+      (the original engine; right for jax-backed processors, whose device
+      runtimes are not fork-safe).
+    * ``"mp"`` — each partition's ingest/firing runs in the worker process
+      owning it (:class:`repro.workers.WorkerRuntime`): real parallelism
+      across owners, failure isolation, and supervised restart with exact
+      state recovery. Requires the fork start method (Linux); window
+      outputs and message values must be picklable. Firing order and
+      results are bit-identical to inline (tests/test_chaos_rescale.py).
+
+    ``worker_options`` forwards kwargs to :class:`WorkerRuntime`
+    (``snapshot_every``, ``batch_timeout``, ``heartbeat_timeout``,
+    ``max_restarts``, ...).
+    """
+
     def __init__(
         self,
         cluster: BrokerCluster,
@@ -50,7 +71,12 @@ class ContinuousStream:
         n_partitions: int = DEFAULT_PARTITIONS,
         owners: list | None = None,
         state_dir: str | None = None,
+        executor: str = "inline",
+        worker_options: dict | None = None,
     ):
+        if executor not in EXECUTORS:
+            raise ValueError(
+                f"unknown executor {executor!r} (expected one of {EXECUTORS})")
         self.cluster = cluster
         self.topic = topic
         self.group = ConsumerGroup(cluster, group, topic)
@@ -76,6 +102,11 @@ class ContinuousStream:
         #: partitioned keyed window state: (key, window) buffers + counters
         self.store = PartitionedStateStore(n_partitions, owners=owners)
         self.migrator = StateMigrator(state_dir, bus=metrics, label=self.metrics_label)
+        self.executor = executor
+        #: the multiprocess partition runtime (mp executor only; spawned by
+        #: ``start()`` so a never-started stream costs no processes)
+        self.runtime: WorkerRuntime | None = None
+        self._worker_options = dict(worker_options or {})
         #: report of the most recent rescale migration (None before any)
         self.last_migration: MigrationReport | None = None
         # quiesce lock: the record loop holds it around ingest+fire, and
@@ -126,15 +157,64 @@ class ContinuousStream:
             with self._fired:
                 self._fired.notify_all()
 
+    # -- mp executor: translate ingest into partition-tagged ops ---------------
+
+    def _ingest_ops(self, msgs: list[Message]) -> list[tuple]:
+        """The host half of mp ingest: watermark tracking, key routing,
+        window assignment and session bookkeeping stay here (stream-global
+        state); the per-partition mutations ship to the owner workers as
+        ops. Mirrors :meth:`_ingest` exactly — late handling, observe-once
+        semantics, merge-before-append ordering."""
+        ops: list[tuple] = []
+        for msg in msgs:
+            ts = msg.timestamp
+            key = self.key_fn(msg)
+            pid = self.store.partition_of(key)
+            if self.watermarks.is_late(ts):
+                self.stats.late_records += 1
+                ops.append((OP_LATE, pid))
+                continue
+            self.watermarks.observe(ts)
+            ops.append((OP_OBSERVE, pid, ts))
+            if isinstance(self.assigner, SessionWindow):
+                windows = self.assigner.assign(ts, key)
+                ops.append((OP_MERGE, pid, key, windows[0]))
+            else:
+                windows = self.assigner.assign(ts)
+            for w in windows:
+                ops.append((OP_APPEND, pid, key, w, msg))
+            self.stats.records += 1
+            self.stats.per_record_latency.append(time.time() - ts)
+        return ops
+
+    def _process_mp(self, msgs: list[Message]) -> None:
+        ops = self._ingest_ops(msgs)
+        wm = self.watermarks.watermark
+        fired = self.runtime.submit(ops, wm)
+        for key, w, out in fired:
+            self.emit(out)
+            self.stats.fired_windows += 1
+        if fired:
+            if isinstance(self.assigner, SessionWindow):
+                self.assigner.close_before(wm)
+            with self._fired:
+                self._fired.notify_all()
+
     def _loop(self) -> None:
         while not self._stop.is_set():
             try:
                 msgs = self.consumer.poll(max_records=256, timeout=0.05)
                 t0 = time.monotonic()
                 with self._state_lock:
-                    for m in msgs:
-                        self._ingest(m)
-                    self._fire_ready()
+                    if self.runtime is not None:
+                        # empty poll: watermark can't have advanced, so
+                        # there is nothing to fire — skip the round trip
+                        if msgs:
+                            self._process_mp(msgs)
+                    else:
+                        for m in msgs:
+                            self._ingest(m)
+                        self._fire_ready()
                 if msgs:
                     self.consumer.commit()
                     if self.metrics is not None:
@@ -164,11 +244,21 @@ class ContinuousStream:
         bus.publish("stream.records_per_sec", n / dt if dt > 0 else 0.0, **labels)
         bus.publish("stream.fired_windows", self.stats.fired_windows, **labels)
         bus.publish("stream.late_records", self.stats.late_records, **labels)
-        bus.publish("stream.buffered_windows", self.store.buffered_windows, **labels)
+        buffered = (self.runtime.buffered_windows if self.runtime is not None
+                    else self.store.buffered_windows)
+        bus.publish("stream.buffered_windows", buffered, **labels)
         bus.publish("stream.lag", sum(
             self.cluster.lag(self.group.group, self.topic).values()), **labels)
+        if self.runtime is not None:
+            # workers.alive / workers.restarts / per-worker latency_p50/p99
+            self.runtime.publish()
 
     def start(self) -> "ContinuousStream":
+        if self.executor == "mp" and self.runtime is None:
+            self.runtime = WorkerRuntime(
+                self.store, self.window_fn, migrator=self.migrator,
+                bus=self.metrics, label=self.metrics_label,
+                **self._worker_options).start()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         return self
@@ -197,9 +287,15 @@ class ContinuousStream:
         # behavior, not a correctness loss
         if self._state_lock.acquire(timeout=5):
             try:
+                if self.runtime is not None:
+                    self.runtime.shutdown()
                 self.migrator.cleanup()
             finally:
                 self._state_lock.release()
+        elif self.runtime is not None:
+            # wedged loop thread: still reap the worker processes (they are
+            # daemons, but an explicit kill frees their queues now)
+            self.runtime.shutdown()
         if self._error:
             raise self._error
 
@@ -231,7 +327,12 @@ class ContinuousStream:
                 return None
             if self.sync_fn is not None:
                 self.sync_fn()
-            report = self.migrator.migrate(self.store, list(devices))
+            if self.runtime is not None:
+                # mp: drain in-flight replies, quiesce workers, then move
+                # partitions between processes through the migrator spool
+                report = self.runtime.rescale(list(devices))
+            else:
+                report = self.migrator.migrate(self.store, list(devices))
             self.last_migration = report
             if self.on_rescale is not None:
                 self.on_rescale(devices)

@@ -35,12 +35,13 @@ from repro.pipeline.spec import (
 _STAGE_FIELDS = {
     "engine", "nodes", "cores_per_node", "group", "output_topic", "emits",
     "batch_interval", "max_batch_records", "backpressure", "window",
-    "state_partitions", "priority", "share", "colocate_with",
+    "state_partitions", "executor", "priority", "share", "colocate_with",
 }
 _SOURCE_FIELDS = {
     "rate_msgs_per_s", "total_messages", "n_producers", "seed", "rate_schedule",
 }
 _ENGINES = {"microbatch", "continuous"}
+_EXECUTORS = {"inline", "mp"}
 _WINDOWS = {"tumbling", "sliding", "session"}
 
 
@@ -173,13 +174,18 @@ class Pipeline:
     def elastic(self, stage: str, *, policy: str = "threshold",
                 interval: float = 0.5, min_devices: int = 1,
                 max_devices: int | None = None, devices_per_step: int = 1,
-                cooldown: float = 1.0, **params) -> "Pipeline":
+                cooldown: float = 1.0,
+                migration_cost_frac: float | None = None,
+                **params) -> "Pipeline":
         """Make ``stage`` elastic: ``policy`` + ``params`` select/configure
-        the ScalingPolicy, the rest configure the controller."""
+        the ScalingPolicy, the rest configure the controller.
+        ``migration_cost_frac`` holds rescales while the last keyed-state
+        migration is still amortizing (continuous stages)."""
         self._elastic[stage] = ElasticSpec(
             policy=policy, params=params, interval=interval,
             min_devices=min_devices, max_devices=max_devices,
             devices_per_step=devices_per_step, cooldown=cooldown,
+            migration_cost_frac=migration_cost_frac,
         )
         return self
 
@@ -240,6 +246,17 @@ class Pipeline:
                 errors.append(
                     f"stage {s.name!r}: unknown engine {s.engine!r} "
                     f"(expected one of {sorted(_ENGINES)})"
+                )
+            if s.executor not in _EXECUTORS:
+                errors.append(
+                    f"stage {s.name!r}: unknown executor {s.executor!r} "
+                    f"(expected one of {sorted(_EXECUTORS)})"
+                )
+            elif s.executor == "mp" and s.engine != "continuous":
+                errors.append(
+                    f"stage {s.name!r}: executor='mp' requires the "
+                    "continuous engine (the micro-batch engine has no "
+                    "partition workers)"
                 )
             if s.engine == "continuous":
                 w = s.window.get("window", "tumbling")
@@ -355,13 +372,17 @@ class Pipeline:
                 continue
             params = dict(el.params)
             if el.policy == "latency" and stage_name in by_name:
-                # the continuous engine never publishes latency_p50/p99, so a
-                # latency policy on it would silently hold forever
-                if by_name[stage_name].engine == "continuous":
+                # the inline continuous executor never publishes
+                # latency_p50/p99, so a latency policy on it would silently
+                # hold forever; the mp executor publishes per-worker and
+                # aggregate quantiles, so it may use one
+                target = by_name[stage_name]
+                if target.engine == "continuous" and target.executor != "mp":
                     errors.append(
                         f"elastic policy 'latency' on {stage_name!r}: the "
-                        "continuous engine publishes no latency quantiles; "
-                        "use a lag-based policy (threshold/pid/binpack)"
+                        "continuous engine's inline executor publishes no "
+                        "latency quantiles; use executor='mp' or a "
+                        "lag-based policy (threshold/pid/binpack)"
                     )
                     continue
                 # the runner injects the stage's batch interval the same way
@@ -408,6 +429,7 @@ def _stage_kwargs(s: StageSpec) -> dict:
         "max_batch_records": s.max_batch_records,
         "backpressure": s.backpressure, "window": dict(s.window),
         "state_partitions": s.state_partitions,
+        "executor": s.executor,
         "options": dict(s.options),
         "priority": s.priority, "share": s.share,
         "colocate_with": s.colocate_with,

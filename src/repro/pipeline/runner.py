@@ -312,6 +312,7 @@ class PipelineRun:
                 on_rescale=getattr(proc, "on_rescale", None),
                 metrics_label=label,
                 n_partitions=stage.state_partitions,
+                executor=stage.executor,
             )
         self._streams[stage.name] = stream
 
@@ -354,6 +355,7 @@ class PipelineRun:
                 interval=el.interval, min_devices=el.min_devices,
                 max_devices=el.max_devices,
                 devices_per_step=el.devices_per_step, cooldown=el.cooldown,
+                migration_cost_frac=el.migration_cost_frac,
             ),
             lag_probe=lambda: sum(stream.lag().values()),
             # scope the controller's snapshot to this stage's stream gauges

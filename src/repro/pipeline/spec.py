@@ -83,6 +83,9 @@ class ElasticSpec:
     max_devices: int | None = None
     devices_per_step: int = 1
     cooldown: float = 1.0
+    #: hold rescales while the last keyed-state migration is still
+    #: amortizing (see ``ElasticConfig.migration_cost_frac``); None = off
+    migration_cost_frac: float | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "params", _freeze_options(self.params))
@@ -121,6 +124,10 @@ class StageSpec:
     #: rescales migrate whole partitions, so more partitions = finer-grained
     #: (but chattier) state movement; see docs/state.md
     state_partitions: int = 64
+    #: continuous engine execution mode: "inline" (in-process, the
+    #: default) or "mp" (one supervised worker process per owner device,
+    #: failure isolation + restart with state recovery; docs/workers.md)
+    executor: str = "inline"
     #: processor factory kwargs
     options: dict = field(default_factory=dict)
     elastic: ElasticSpec | None = None

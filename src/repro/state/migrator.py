@@ -26,7 +26,7 @@ import shutil
 import tempfile
 import time
 from dataclasses import dataclass, field
-from typing import Any, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 from repro.checkpoint.manager import atomic_dir
 from repro.state.partition import LOCAL_OWNER, moved_partitions, range_assignment
@@ -97,35 +97,61 @@ class StateMigrator:
     def migrate(self, store: PartitionedStateStore,
                 new_owners: Sequence[Any]) -> MigrationReport:
         """Quiesced-caller contract: the store must not be mutated while
-        this runs (ContinuousStream holds its state lock around the call)."""
+        this runs (ContinuousStream holds its state lock around the call).
+
+        The in-process special case of :meth:`handoff`: fetch serializes
+        straight out of the store, install deserializes straight back in.
+        """
+
+        def fetch(pids: Sequence[int]) -> dict[int, bytes]:
+            return {pid: serialize_partition(store.partitions[pid]) for pid in pids}
+
+        def install(assignment: dict[int, Any],
+                    payloads: Mapping[int, bytes]) -> int:
+            store.assignment = assignment
+            moved_records = 0
+            for pid, data in payloads.items():
+                part = deserialize_partition(data)
+                assert part.pid == pid
+                store.partitions[pid] = part
+                moved_records += part.buffered_records
+            return moved_records
+
+        return self.handoff(store, new_owners, fetch, install)
+
+    def handoff(self, store: PartitionedStateStore, new_owners: Sequence[Any],
+                fetch: Callable[[Sequence[int]], dict[int, bytes]],
+                install: Callable[[dict[int, Any], Mapping[int, bytes]], int],
+                ) -> MigrationReport:
+        """The migration lifecycle with pluggable endpoints — what lets the
+        same quiesce -> snapshot -> spool -> reassign -> restore path move
+        partitions *between worker processes* (repro.workers) as well as
+        within the host store.
+
+        ``fetch(pids)`` pulls the serialized bytes of each moved partition
+        from wherever it currently lives (and releases it there);
+        ``install(assignment, payloads)`` makes the new assignment live and
+        delivers the spooled bytes to each partition's new home, returning
+        the number of buffered records moved. Moved state always takes the
+        full serialize -> spool -> read-back trip, regardless of endpoint.
+        """
         t0 = time.perf_counter()
         from_owners = tuple(store.owners)
         new, moved = self.plan(store, new_owners)
         seq = self._seq
         self._seq += 1
 
-        # snapshot: serialize only the diff, spool atomically
-        payloads = {pid: serialize_partition(store.partitions[pid]) for pid in moved}
+        payloads = fetch(moved)
         spool = ""
         if payloads:
-            spool = os.path.join(self._spool_root(), f"migration_{seq:06d}")
-            with atomic_dir(spool) as tmp:
-                for pid, data in payloads.items():
-                    with open(os.path.join(tmp, f"p{pid:05d}.bin"), "wb") as f:
-                        f.write(data)
+            spool = self.write_spool(payloads, f"migration_{seq:06d}")
 
-        # reassign, then restore from the spool (not from the live objects:
-        # moved state must survive the full serde round trip)
-        store.assignment = new
-        moved_records = 0
-        for pid in moved:
-            with open(os.path.join(spool, f"p{pid:05d}.bin"), "rb") as f:
-                part = deserialize_partition(f.read())
-            assert part.pid == pid
-            store.partitions[pid] = part
-            moved_records += part.buffered_records
+        # deliver from the spool (not from the in-memory payloads): moved
+        # state must survive the full serde + disk round trip
+        restored = self.read_spool(spool, moved) if payloads else {}
+        moved_records = install(new, restored)
 
-        self._gc_spools()
+        self._gc_spools("migration_")
         report = MigrationReport(
             seq=seq,
             from_owners=from_owners,
@@ -145,12 +171,47 @@ class StateMigrator:
             self.bus.publish("state.bytes_moved", report.bytes_moved, **labels)
         return report
 
-    def _gc_spools(self) -> None:
+    # -- spool primitives (shared with the worker runtime's checkpoints) -------
+
+    def write_spool(self, payloads: Mapping[int, bytes], name: str) -> str:
+        """Atomically write one ``pid -> serialized partition`` set under
+        ``name`` in the spool root; returns the committed path. Used for
+        migration spools and for the worker runtime's periodic restart
+        checkpoints (``wckpt_*``)."""
+        spool = os.path.join(self._spool_root(), name)
+        with atomic_dir(spool) as tmp:
+            for pid, data in payloads.items():
+                with open(os.path.join(tmp, f"p{pid:05d}.bin"), "wb") as f:
+                    f.write(data)
+        return spool
+
+    def read_spool(self, spool: str,
+                   pids: Sequence[int] | None = None) -> dict[int, bytes]:
+        """Read back serialized partitions from a committed spool directory
+        (all of them, or just ``pids``)."""
+        if pids is None:
+            pids = sorted(
+                int(n[1:-4]) for n in os.listdir(spool)
+                if n.startswith("p") and n.endswith(".bin")
+            )
+        out: dict[int, bytes] = {}
+        for pid in pids:
+            path = os.path.join(spool, f"p{pid:05d}.bin")
+            if os.path.exists(path):
+                with open(path, "rb") as f:
+                    out[pid] = f.read()
+        return out
+
+    def _gc_spools(self, prefix: str) -> None:
         if self.directory is None or not os.path.isdir(self.directory):
             return
         spools = sorted(
             n for n in os.listdir(self.directory)
-            if n.startswith("migration_") and not n.endswith(".tmp")
+            if n.startswith(prefix) and not n.endswith(".tmp")
         )
         for name in spools[: -self.keep_last]:
             shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+
+    def gc_checkpoints(self) -> None:
+        """Bound the worker-checkpoint spools like migration spools."""
+        self._gc_spools("wckpt_")

@@ -49,6 +49,43 @@ class StatePartition:
         return sum(len(msgs) for msgs in self.buffers.values())
 
 
+def merge_session_into(part: StatePartition, key, merged: Window) -> None:
+    """Fold every buffered window of ``key`` overlapping ``merged`` into the
+    ``(key, merged)`` buffer (session-window merge), preserving canonical
+    event-time order. Shared by the in-process store and the worker-process
+    runtime (repro.workers) so both executors merge identically."""
+    victims = [
+        (k, w) for (k, w) in part.buffers
+        if k == key and w != merged
+        and not (w[1] <= merged[0] or w[0] >= merged[1])
+    ]
+    if not victims:
+        return
+    target = part.buffers.setdefault((key, merged), [])
+    for kw in victims:
+        target.extend(part.buffers.pop(kw))
+    # canonical event-time order: plain fold order would depend on dict
+    # insertion order, which a migration round trip permutes (restored
+    # buffers come back in canonical serde order) — an order-sensitive
+    # window_fn would then see rescale-dependent float low bits
+    target.sort(key=lambda m: (m.timestamp, m.partition, m.offset))
+
+
+def ready_buffers(partitions: Iterable[StatePartition],
+                  watermark: float) -> list[tuple[Any, Window, int]]:
+    """Buffers whose window closed at ``watermark``, in the deterministic
+    firing order both executors share: (window end, window start, partition,
+    key encoding). Dict insertion order — which a migration round trip (or a
+    worker restart replay) may permute — never decides firing order."""
+    out = []
+    for part in partitions:
+        for (key, w) in part.buffers:
+            if w[1] <= watermark:
+                out.append((key, w, part.pid))
+    out.sort(key=lambda kwp: (kwp[1][1], kwp[1][0], kwp[2], key_bytes(kwp[0])))
+    return out
+
+
 class PartitionedStateStore:
     """Fixed ring of ``n_partitions`` state partitions plus the live
     partition -> owner assignment.
@@ -120,37 +157,12 @@ class PartitionedStateStore:
         """Fold every buffered window of ``key`` overlapping ``merged`` into
         the ``(key, merged)`` buffer (session-window merge). Buffer order is
         preserved: earlier windows' messages keep their relative order."""
-        part = self.partitions[self.partition_of(key)]
-        victims = [
-            (k, w) for (k, w) in part.buffers
-            if k == key and w != merged
-            and not (w[1] <= merged[0] or w[0] >= merged[1])
-        ]
-        if not victims:
-            return
-        target = part.buffers.setdefault((key, merged), [])
-        for kw in victims:
-            target.extend(part.buffers.pop(kw))
-        # canonical event-time order: plain fold order would depend on dict
-        # insertion order, which a migration round trip permutes (restored
-        # buffers come back in canonical serde order) — an order-sensitive
-        # window_fn would then see rescale-dependent float low bits
-        target.sort(key=lambda m: (m.timestamp, m.partition, m.offset))
+        merge_session_into(self.partitions[self.partition_of(key)], key, merged)
 
     # -- read path (engine firing) ----------------------------------------------
 
     def _ready(self, watermark: float) -> list[tuple[Any, Window, int]]:
-        """Buffers whose window closed at ``watermark``, in deterministic
-        firing order: (window end, window start, partition, key encoding).
-        Dict insertion order — which a migration round trip may permute —
-        never decides firing order."""
-        out = []
-        for part in self.partitions.values():
-            for (key, w) in part.buffers:
-                if w[1] <= watermark:
-                    out.append((key, w, part.pid))
-        out.sort(key=lambda kwp: (kwp[1][1], kwp[1][0], kwp[2], key_bytes(kwp[0])))
-        return out
+        return ready_buffers(self.partitions.values(), watermark)
 
     def pop_ready(self, watermark: float) -> list[tuple[Any, Window, list]]:
         return [

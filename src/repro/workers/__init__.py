@@ -1,0 +1,47 @@
+"""repro.workers — multiprocess partition execution runtime.
+
+Real process-level parallelism and failure isolation for the continuous
+engine's keyed window state: each state partition's ingest/firing runs in
+the worker process owning it (``ContinuousStream(executor="mp")``), with a
+supervisor per worker detecting crash/hang and restarting with exact state
+recovery from the StateMigrator spool. See docs/workers.md.
+"""
+from repro.workers.channel import WorkerChannel
+from repro.workers.proto import (
+    CONFIGURE,
+    PROCESS_BATCH,
+    QUIESCE,
+    RESTORE,
+    SNAPSHOT,
+    STATS,
+    STOP,
+    BatchResult,
+    Reply,
+    Request,
+    WorkerCrash,
+    WorkerError,
+    WorkerUnresponsive,
+)
+from repro.workers.runtime import WorkerRuntime
+from repro.workers.supervisor import WorkerSupervisor
+from repro.workers.worker import PartitionWorker
+
+__all__ = [
+    "BatchResult",
+    "CONFIGURE",
+    "PROCESS_BATCH",
+    "PartitionWorker",
+    "QUIESCE",
+    "RESTORE",
+    "Reply",
+    "Request",
+    "SNAPSHOT",
+    "STATS",
+    "STOP",
+    "WorkerChannel",
+    "WorkerCrash",
+    "WorkerError",
+    "WorkerRuntime",
+    "WorkerSupervisor",
+    "WorkerUnresponsive",
+]

@@ -1,0 +1,125 @@
+"""WorkerSupervisor — one per worker process: lifecycle + liveness.
+
+The supervisor owns everything incarnation-scoped: the process handle, the
+channel (queue pair), and the shared heartbeat cell. A respawn replaces
+all three — late writes from a killed incarnation land in abandoned
+queues, and the fresh heartbeat cell starts un-stale.
+
+Liveness is two signals with different latencies:
+
+* **crash** — ``Process.is_alive()`` goes false the moment the child dies
+  (SIGKILL, OOM, unhandled exit); the channel's reply poll notices within
+  ~50 ms.
+* **hang** — the process is alive but stopped stamping its heartbeat (a
+  wedged window_fn). The supervisor registers with the shared
+  :class:`~repro.core.failure.HeartbeatMonitor` using a pull-based
+  ``beat_fn`` that samples the worker's ``mp.Value``; once the sampled
+  beat is older than the monitor's timeout, :meth:`responsive` flips and
+  in-flight ``recv`` calls raise :class:`WorkerUnresponsive`.
+
+Both surface as a :class:`WorkerCrash` subclass to the runtime, which
+answers with kill + respawn + restore-from-checkpoint + journal replay.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+from repro.core.failure import HeartbeatMonitor
+from repro.workers.channel import WorkerChannel
+from repro.workers.proto import STOP, Reply, WorkerError
+from repro.workers.worker import PartitionWorker
+
+
+class WorkerSupervisor:
+    def __init__(self, worker_id: int, owner: Any,
+                 window_fn: Callable[[Any, tuple, list], Any], *,
+                 monitor: HeartbeatMonitor, ctx,
+                 batch_timeout: float = 30.0):
+        self.worker_id = worker_id
+        self.owner = owner  # the pilot device whose partitions this worker runs
+        self.window_fn = window_fn
+        self.monitor = monitor
+        self.ctx = ctx
+        self.batch_timeout = batch_timeout
+        self.restarts = 0
+        self.channel: WorkerChannel | None = None
+        self.process = None
+        self._beat = None
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def spawn(self) -> "WorkerSupervisor":
+        self.channel = WorkerChannel(self.ctx)
+        self._beat = self.ctx.Value("d", time.monotonic())
+        worker = PartitionWorker(self.worker_id, self.channel.requests,
+                                 self.channel.replies, self._beat,
+                                 self.window_fn)
+        self.process = self.ctx.Process(
+            target=worker.run, daemon=True,
+            name=f"repro-worker-{self.worker_id}")
+        self.process.start()
+        beat = self._beat  # bind this incarnation's cell, not the attribute
+        self.monitor.watch(self, beat_fn=lambda: beat.value)
+        return self
+
+    def kill(self) -> None:
+        """Hard-stop this incarnation (no goodbye): unwatch, SIGKILL, reap,
+        release the channel. Safe on an already-dead worker."""
+        self.monitor.unwatch(self)
+        if self.process is not None:
+            try:
+                self.process.kill()
+            except Exception:
+                pass
+            self.process.join(timeout=5)
+        if self.channel is not None:
+            self.channel.close()
+
+    def respawn(self) -> "WorkerSupervisor":
+        """Replace the incarnation: fresh process, fresh queues, fresh
+        heartbeat. The caller (runtime) re-CONFIGUREs, RESTOREs from the
+        last checkpoint and replays the journal."""
+        self.restarts += 1
+        self.kill()
+        return self.spawn()
+
+    def stop(self, timeout: float = 2.0) -> None:
+        """Graceful STOP (lets the worker ack and exit its loop), falling
+        back to :meth:`kill` — which also runs after a clean exit to reap
+        the process and close the channel."""
+        try:
+            if self.alive():
+                self.channel.request(STOP, timeout=timeout,
+                                     alive_fn=self.alive)
+        except Exception:
+            pass
+        self.kill()
+
+    # -- liveness -------------------------------------------------------------
+
+    def alive(self) -> bool:
+        return self.process is not None and self.process.is_alive()
+
+    def responsive(self) -> bool:
+        """False once the sampled heartbeat goes stale (wedged worker)."""
+        return self.monitor.is_alive(self)
+
+    # -- protocol -------------------------------------------------------------
+
+    def send(self, cmd: str, payload: Any = None) -> int:
+        """Fire a command without waiting (the runtime pipelines
+        PROCESS_BATCH across all workers, then collects)."""
+        return self.channel.send(cmd, payload)
+
+    def recv(self, seq: int, timeout: float | None = None):
+        reply: Reply = self.channel.recv(
+            seq, self.batch_timeout if timeout is None else timeout,
+            alive_fn=self.alive, responsive_fn=self.responsive)
+        if not reply.ok:
+            raise WorkerError(f"worker {self.worker_id}: {reply.error}")
+        return reply.payload
+
+    def request(self, cmd: str, payload: Any = None,
+                timeout: float | None = None):
+        return self.recv(self.send(cmd, payload), timeout)

@@ -14,7 +14,9 @@ partition + single keyed producer keep arrival order identical, so every
 order — any loss, duplication, or reorder during migration shows up as a
 sum mismatch.
 """
+import os
 import random
+import signal
 import time
 
 import numpy as np
@@ -54,22 +56,29 @@ def _window_fn(key, w, msgs):
     return key, w, float(np.sum(vals)), len(msgs)
 
 
-def _run(chaos_seed: int | None):
+def _run(chaos_seed: int | None, *, executor: str = "inline", cores: int = 2,
+         kill_seed: int | None = None):
+    """One full stream run; returns (results, fired, late, migrations,
+    restarts). ``executor="mp"`` routes partitions to worker processes;
+    ``kill_seed`` SIGKILLs one seeded-random worker mid-stream (mp only) —
+    the supervisor must restart it from the checkpoint+journal spool."""
     svc = PilotComputeService(devices=list(range(10)))
     results: dict = {}
-    migrations = 0
+    migrations = restarts = 0
     try:
         kafka = svc.submit_pilot({"number_of_nodes": 1, "type": "kafka"})
         cluster = kafka.get_context()
         cluster.create_topic("chaos", 1)
         flink = svc.submit_pilot(
-            {"number_of_nodes": 1, "cores_per_node": 2, "type": "flink"})
+            {"number_of_nodes": 1, "cores_per_node": cores, "type": "flink"})
         stream = flink.get_context().stream(
             cluster, "chaos", group="g",
             assigner=TumblingWindow(WINDOW),
             window_fn=_window_fn,
             key_fn=lambda m: int(m.value[0]),
             emit=lambda out: results.__setitem__((out[0], out[1]), (out[2], out[3])),
+            executor=executor,
+            worker_options={"snapshot_every": 8} if executor == "mp" else None,
         )
         stream.start()
         source = _DeterministicSource(cluster, SourceConfig(
@@ -80,11 +89,19 @@ def _run(chaos_seed: int | None):
         scenario.start()
 
         rng = random.Random(chaos_seed) if chaos_seed is not None else None
+        kill_rng = random.Random(kill_seed) if kill_seed is not None else None
         extensions: list = []
         deadline = time.monotonic() + 60
         while stream.stats.fired_windows < EXPECTED_WINDOWS:
             assert time.monotonic() < deadline, (
                 f"{stream.stats.fired_windows}/{EXPECTED_WINDOWS} windows fired")
+            if kill_rng is not None and stream.stats.fired_windows >= EXPECTED_WINDOWS // 3:
+                # SIGKILL a seeded-random worker mid-window: the supervisor
+                # must respawn it and replay checkpoint + journal. Issued from
+                # this thread so it never lands inside a rescale handoff.
+                sup = kill_rng.choice(stream.runtime._sups)
+                os.kill(sup.process.pid, signal.SIGKILL)
+                kill_rng = None
             if rng is None:
                 time.sleep(0.02)
                 continue
@@ -105,22 +122,61 @@ def _run(chaos_seed: int | None):
         fired = stream.stats.fired_windows
         late = stream.stats.late_records
         migrations = len(stream.migrator.reports)
+        restarts = stream.runtime.restarts if stream.runtime is not None else 0
     finally:
         svc.cancel()
-    return results, fired, late, migrations
+    return results, fired, late, migrations, restarts
+
+
+def _assert_bit_identical(base_results, other_results, label):
+    assert other_results.keys() == base_results.keys(), label
+    for kw, (total, count) in base_results.items():
+        o_total, o_count = other_results[kw]
+        assert o_count == count, f"{label}: window {kw}: {o_count} != {count} records"
+        assert o_total == total, f"{label}: window {kw}: aggregate drifted"
 
 
 @pytest.mark.slow
 def test_windows_identical_under_random_rescale():
-    base_results, base_fired, base_late, _ = _run(chaos_seed=None)
-    chaos_results, chaos_fired, chaos_late, migrations = _run(chaos_seed=20260729)
+    base_results, base_fired, base_late, _, _ = _run(chaos_seed=None)
+    chaos_results, chaos_fired, chaos_late, migrations, _ = _run(chaos_seed=20260729)
 
     assert base_late == chaos_late == 0
     assert migrations >= 3, "chaos run never actually migrated state"
     assert chaos_fired == base_fired == EXPECTED_WINDOWS
     # bit-identical: same window set, and exact float equality on sums
-    assert chaos_results.keys() == base_results.keys()
-    for kw, (total, count) in base_results.items():
-        c_total, c_count = chaos_results[kw]
-        assert c_count == count, f"window {kw}: {c_count} != {count} records"
-        assert c_total == total, f"window {kw}: aggregate drifted"
+    _assert_bit_identical(base_results, chaos_results, "chaos rescale")
+
+
+@pytest.mark.slow
+def test_mp_executor_identical_under_chaos_and_worker_kill():
+    """The mp executor must be unobservable relative to the inline
+    single-process baseline, under three escalating scenarios:
+
+    1. static resources, 4 worker processes;
+    2. random grow/shrink chaos (every rescale quiesces workers, drains
+       in-flight batches, and migrates partitions across processes);
+    3. a seeded SIGKILL of a random worker mid-window — the supervisor
+       restarts it and replays checkpoint + journal, so firings stay
+       bit-identical with zero loss or duplication.
+    """
+    base_results, base_fired, base_late, _, _ = _run(chaos_seed=None)
+    assert base_late == 0 and base_fired == EXPECTED_WINDOWS
+
+    mp_results, mp_fired, mp_late, _, mp_restarts = _run(
+        chaos_seed=None, executor="mp", cores=4)
+    assert mp_late == 0 and mp_fired == EXPECTED_WINDOWS
+    assert mp_restarts == 0
+    _assert_bit_identical(base_results, mp_results, "mp static")
+
+    ch_results, ch_fired, ch_late, ch_migrations, _ = _run(
+        chaos_seed=20260730, executor="mp", cores=2)
+    assert ch_late == 0 and ch_fired == EXPECTED_WINDOWS
+    assert ch_migrations >= 3, "mp chaos run never actually migrated state"
+    _assert_bit_identical(base_results, ch_results, "mp chaos rescale")
+
+    k_results, k_fired, k_late, _, k_restarts = _run(
+        chaos_seed=None, executor="mp", cores=4, kill_seed=20260731)
+    assert k_late == 0 and k_fired == EXPECTED_WINDOWS
+    assert k_restarts >= 1, "SIGKILL never triggered a supervisor restart"
+    _assert_bit_identical(base_results, k_results, "mp worker kill")

@@ -208,6 +208,34 @@ def test_controller_grows_and_shrinks_extension_pilots():
     svc.cancel()
 
 
+def test_controller_defers_rescale_while_migration_cost_amortizes():
+    """With ``migration_cost_frac`` set, an expensive recent state
+    migration holds the controller (publishing ``elastic.rescale_deferred``)
+    until cost / elapsed drops below the configured fraction."""
+    svc = PilotComputeService(devices=list(range(8)))
+    bus = MetricsBus()
+    base = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": 2, "type": "spark"})
+    ctl = ElasticController(
+        svc, base, bus,
+        ThresholdHysteresisPolicy(high_lag=100, low_lag=10, up_stable=1),
+        config=ElasticConfig(cooldown=0.0, interval=0.5, migration_cost_frac=0.5),
+        lag_probe=lambda: 1000.0,
+    )
+    # a 2s migration just happened: amortization window = 2.0 / 0.5 = 4s
+    bus.publish("state.migration_ms", 2000.0)
+    held = ctl.step()
+    assert held.delta_devices == 0 and ctl.devices == 2
+    assert bus.value("elastic.rescale_deferred") == 1.0
+    # same cost, but long enough ago that it has amortized: scaling resumes
+    bus.publish("state.migration_ms", 2000.0, t=time.monotonic() - 10.0)
+    up = ctl.step()
+    assert up.delta_devices > 0 and ctl.devices > 2
+    # cheap migrations (cost <= frac * interval) never defer
+    bus.publish("state.migration_ms", 50.0)
+    assert ctl._migration_deferred(time.monotonic()) is False
+    svc.cancel()
+
+
 def test_controller_rejects_scale_up_without_headroom():
     svc = PilotComputeService(devices=list(range(2)))
     bus = MetricsBus()
