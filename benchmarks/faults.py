@@ -1,0 +1,235 @@
+"""Fault-recovery latency and failover cost (docs/faults.md).
+
+Drives a live deterministic source through an inline ContinuousStream and
+injects one fault per run via :mod:`repro.faults`:
+
+* ``kill_broker_node`` — leader loss on a replicated topic with a
+  leader-election blackout: recovery latency is the consumer's stall (from
+  injection until records flow again), plus the throughput dip across the
+  blackout and the acked-record-loss count (pinned to zero by acks-all
+  replication);
+* ``kill_pilot`` — stage-pilot crash recovered by the StageReconciler:
+  end-to-end outage (heartbeat detection + reprovision + checkpoint
+  restore) and the stream's own ``recover()`` latency;
+* ``slow_consumer`` — an injected poll delay that expires mid-stream:
+  degraded-mode throughput ratio while the fault is active.
+
+Every faulted run's window outputs are compared against the fault-free
+baseline (``outputs_match_baseline``) — the recovery numbers only count if
+nothing was lost or duplicated. Writes ``BENCH_faults.json`` next to this
+file; ``--quick`` trims the message count for CI bench-smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import PilotComputeService
+from repro.faults import FaultInjector, FaultSchedule
+from repro.miniapps import SourceConfig
+from repro.miniapps.mass import StreamSource
+from repro.pipeline.runner import StageReconciler
+from repro.streaming import TumblingWindow
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_faults.json")
+
+N_MSGS = 3000
+QUICK_MSGS = 1500
+RATE = 2000.0  # msgs/s — constant, so a throughput dip is attributable
+DT = 0.01
+WINDOW = 0.1
+N_KEYS = 5
+BASE_TS = 1000.0
+BLACKOUT = 0.25
+
+
+class _DeterministicSource(StreamSource):
+    def make_message(self, rng, i):
+        return np.array([i % N_KEYS, float(i) * 1.25], dtype=np.float64)
+
+    def make_timestamp(self, rng, i):
+        return BASE_TS + i * DT
+
+
+def _window_fn(key, w, msgs):
+    vals = np.array([m.value[1] for m in msgs], dtype=np.float64)
+    return key, w, float(np.sum(vals)), len(msgs)
+
+
+def _expected_windows(n_msgs: int) -> int:
+    return (int(n_msgs * DT / WINDOW) - 1) * N_KEYS
+
+
+def _run(n_msgs: int, schedule=None, *, broker_nodes=1, replication_factor=1,
+         checkpoint_every=0, reconcile=False) -> dict:
+    svc = PilotComputeService(devices=list(range(10)),
+                              heartbeat_interval=0.05, heartbeat_timeout=0.25)
+    results: dict = {}
+    injector = reconciler = None
+    flink_pcd = {"number_of_nodes": 1, "cores_per_node": 2, "type": "flink"}
+    try:
+        kafka = svc.submit_pilot({"number_of_nodes": broker_nodes, "type": "kafka"})
+        cluster = kafka.get_context()
+        cluster.create_topic("bench", 1, replication_factor=replication_factor)
+        flink = svc.submit_pilot(flink_pcd)
+        stream = flink.get_context().stream(
+            cluster, "bench", group="g",
+            assigner=TumblingWindow(WINDOW),
+            window_fn=_window_fn,
+            key_fn=lambda m: int(m.value[0]),
+            emit=lambda out: results.__setitem__((out[0], out[1]), (out[2], out[3])),
+            checkpoint_every=checkpoint_every,
+        )
+        stream.start()
+        if reconcile:
+            reconciler = StageReconciler(svc)
+            reconciler.manage("bench", flink, stream, flink_pcd)
+        source = _DeterministicSource(cluster, SourceConfig(
+            "bench", total_messages=n_msgs, n_producers=1, keyed=True,
+            seed=7, rate_msgs_per_s=RATE))
+        source.start()
+        if schedule is not None:
+            injector = FaultInjector(schedule, seed=0, cluster=cluster,
+                                     topic="bench", stream=stream,
+                                     service=svc, pilot=flink).start()
+        expected = _expected_windows(n_msgs)
+        timeline: list[tuple[float, int]] = []  # (t, records consumed)
+        t_fault = rec_at_fault = None
+        recovery_s = None
+        t0 = time.perf_counter()
+        deadline = t0 + 120
+        while stream.stats.fired_windows < expected:
+            now = time.perf_counter()
+            assert now < deadline, (
+                f"stalled at {stream.stats.fired_windows}/{expected}; "
+                f"events={injector.events if injector else []}")
+            rec = stream.stats.records
+            timeline.append((now, rec))
+            if injector is not None and t_fault is None and injector.events:
+                t_fault, rec_at_fault = now, rec
+            elif t_fault is not None and recovery_s is None and rec != rec_at_fault:
+                # progress after the fault: crash recovery restores a lower
+                # checkpointed count, a blackout resumes a higher one
+                recovery_s = now - t_fault
+            time.sleep(0.002)
+        wall_s = time.perf_counter() - t0
+        source.stop()
+        if injector is not None:
+            injector.stop()
+        if reconciler is not None:
+            reconciler.close()
+        stream.stop()
+        return {
+            "results": results,
+            "wall_s": wall_s,
+            "fired": stream.stats.fired_windows,
+            "late": stream.stats.late_records,
+            "recovery_s": recovery_s,
+            "t_fault_rel": None if t_fault is None else t_fault - t0,
+            "timeline": [(t - t0, r) for t, r in timeline],
+            "failovers": cluster.failovers,
+            "lost": cluster.lost_records,
+            "prod_retries": sum(p.retries for p in source.producers),
+            "cons_retries": stream.consumer.retries,
+            "stream_recovery_ms": stream.last_recovery_ms,
+            "stage_recoveries": reconciler.recoveries if reconciler else 0,
+        }
+    finally:
+        svc.cancel()
+
+
+def _rate(timeline, t_lo, t_hi) -> float:
+    """Consumed records/s over [t_lo, t_hi) of a (t, records) timeline."""
+    pts = [(t, r) for t, r in timeline if t_lo <= t < t_hi]
+    if len(pts) < 2 or pts[-1][0] == pts[0][0]:
+        return 0.0
+    return (pts[-1][1] - pts[0][1]) / (pts[-1][0] - pts[0][0])
+
+
+def run(quick: bool = False) -> dict:
+    n_msgs = QUICK_MSGS if quick else N_MSGS
+    at = n_msgs // 2
+    expected = _expected_windows(n_msgs)
+
+    base = _run(n_msgs)
+    assert base["fired"] == expected and base["late"] == 0
+    print(f"baseline: {base['wall_s']:.2f} s, {base['fired']} windows")
+
+    rows = []
+
+    b = _run(n_msgs,
+             FaultSchedule().kill_broker_node(at_records=at, node="leader",
+                                              blackout=BLACKOUT),
+             broker_nodes=3, replication_factor=2)
+    tf = b["t_fault_rel"]
+    dip = (_rate(b["timeline"], tf, tf + BLACKOUT + 0.1)
+           / max(_rate(b["timeline"], tf - 0.5, tf), 1e-9))
+    rows.append({
+        "fault": "kill_broker_node",
+        "recovery_latency_ms": b["recovery_s"] * 1e3,
+        "failovers": b["failovers"],
+        "acked_lost_records": b["lost"],
+        "retries": b["prod_retries"] + b["cons_retries"],
+        "throughput_dip_ratio": dip,  # consumed rate across blackout / before
+        "outputs_match_baseline": b["results"] == base["results"],
+    })
+
+    p = _run(n_msgs, FaultSchedule().kill_pilot(at_records=at),
+             checkpoint_every=100, reconcile=True)
+    rows.append({
+        "fault": "kill_pilot",
+        "recovery_latency_ms": p["recovery_s"] * 1e3,  # detection + reprovision + restore
+        "stream_recover_ms": p["stream_recovery_ms"],  # restore alone
+        "stage_recoveries": p["stage_recoveries"],
+        "acked_lost_records": p["lost"],
+        "outputs_match_baseline": p["results"] == base["results"],
+    })
+
+    delay = 0.02
+    s = _run(n_msgs, FaultSchedule().slow_consumer(
+        at_records=at, delay=delay, until_records=at + n_msgs // 5))
+    tf = s["t_fault_rel"]
+    degraded = (_rate(s["timeline"], tf, tf + 0.4)
+                / max(_rate(s["timeline"], tf - 0.5, tf), 1e-9))
+    rows.append({
+        "fault": "slow_consumer",
+        "recovery_latency_ms": s["recovery_s"] * 1e3,
+        "degraded_throughput_ratio": degraded,
+        "acked_lost_records": s["lost"],
+        "outputs_match_baseline": s["results"] == base["results"],
+    })
+
+    for r in rows:
+        print(f"{r['fault']:>18}: recovery {r['recovery_latency_ms']:7.1f} ms, "
+              f"lost={r['acked_lost_records']}, "
+              f"identical={r['outputs_match_baseline']}")
+    return {
+        "benchmark": "faults",
+        "msgs": n_msgs,
+        "rate_msgs_per_s": RATE,
+        "blackout_s": BLACKOUT,
+        "baseline_wall_s": base["wall_s"],
+        "results": rows,
+        "acked_loss_total": sum(r["acked_lost_records"] for r in rows),
+        "all_outputs_identical": all(r["outputs_match_baseline"] for r in rows),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out} (loss={out['acked_loss_total']}, "
+          f"identical={out['all_outputs_identical']})")
+
+
+if __name__ == "__main__":
+    main()

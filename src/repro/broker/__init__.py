@@ -1,6 +1,7 @@
 """Log-based message broker (Kafka analog) — host-side data plane."""
 from repro.broker.cluster import BrokerCluster, BrokerNode, Topic
 from repro.broker.consumer import Consumer, ConsumerGroup, Message
+from repro.broker.errors import BrokerError, BrokerTimeout, BrokerUnavailable
 from repro.broker.log import BackpressureError, PartitionLog
 from repro.broker.producer import Producer
 from repro.broker.records import Record, decode_array, decode_msg, encode_array, encode_msg
@@ -8,7 +9,10 @@ from repro.broker.records import Record, decode_array, decode_msg, encode_array,
 __all__ = [
     "BackpressureError",
     "BrokerCluster",
+    "BrokerError",
     "BrokerNode",
+    "BrokerTimeout",
+    "BrokerUnavailable",
     "Consumer",
     "ConsumerGroup",
     "Message",

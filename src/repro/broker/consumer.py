@@ -6,6 +6,15 @@ Matches the Kafka semantics that the streaming engines rely on:
 * offsets are explicit — commit-after-process gives at-least-once, and
   committing atomically with a state checkpoint gives exactly-once
   (engines/microbatch.py).
+
+Fault tolerance (docs/faults.md): a group registers with its cluster so a
+broker-node loss bumps the generation (members re-sync against promoted
+leaders on their next poll). ``poll`` treats :class:`BrokerUnavailable`
+from a failover blackout as "no data yet" — counted in ``retries``, never
+raised into an engine loop. An optional ``max_lag`` turns unbounded lag
+into graceful degradation: records beyond the bound are shed (skipped and
+counted in ``shed_records`` / the ``broker.shed_records`` gauge) so a slow
+consumer falls behind by a bounded amount instead of indefinitely.
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ from dataclasses import dataclass
 from typing import Any, Callable
 
 from repro.broker.cluster import BrokerCluster
+from repro.broker.errors import BrokerUnavailable
 from repro.broker.records import Record, decode_array, decode_compressed, decode_msg
 
 
@@ -51,6 +61,9 @@ class ConsumerGroup:
         self._members: list[str] = []
         self._lock = threading.RLock()
         self._generation = 0
+        register = getattr(cluster, "register_group", None)
+        if register is not None:
+            register(self)
 
     def join(self, member_id: str) -> None:
         with self._lock:
@@ -64,6 +77,13 @@ class ConsumerGroup:
             if member_id in self._members:
                 self._members.remove(member_id)
                 self._generation += 1
+
+    def on_cluster_change(self) -> None:
+        """Cluster callback after a node loss/failover: bump the generation
+        so every member refreshes its assignment (and clamps positions
+        against the promoted leaders) on its next poll."""
+        with self._lock:
+            self._generation += 1
 
     def assignment(self, member_id: str) -> list[int]:
         """Range assignment of partitions for this member."""
@@ -95,12 +115,17 @@ class Consumer:
         *,
         deserialize: bool = True,
         from_committed: bool = True,
+        max_lag: int | None = None,
         metrics: Any | None = None,
     ):
         self.cluster = cluster
         self.group = group
         self.member_id = member_id
         self.deserialize = deserialize
+        #: lag bound per partition: poll sheds (skips) records older than
+        #: ``high_watermark - max_lag`` instead of falling behind unboundedly.
+        #: None = consume everything, the seed behavior.
+        self.max_lag = max_lag
         #: duck-typed MetricsBus (repro.elastic.metrics): consumption
         #: counters are published per non-empty poll when set
         self.metrics = metrics
@@ -110,7 +135,13 @@ class Consumer:
         self._from_committed = from_committed
         self.consumed_records = 0
         self.consumed_bytes = 0
-        self._refresh_assignment()
+        #: polls that hit a failover blackout and treated it as empty
+        self.retries = 0
+        #: records skipped by the max_lag degraded mode
+        self.shed_records = 0
+        #: extra sleep before every poll — the ``slow_consumer`` fault knob
+        #: (repro.faults); processing slows down, outputs stay identical
+        self.injected_poll_delay = 0.0
 
     def _refresh_assignment(self) -> None:
         if self._generation == self.group.generation:
@@ -135,7 +166,23 @@ class Consumer:
     def seek(self, partition: int, offset: int) -> None:
         self._positions[partition] = offset
 
+    def _shed_locked(self, p: int, pos: int) -> int:
+        """Degraded mode: jump the position forward when lag exceeds
+        ``max_lag``, counting the skipped records as shed."""
+        hw = self.cluster.topic(self.group.topic).partitions[p].high_watermark
+        floor = hw - self.max_lag
+        if pos < floor:
+            self.shed_records += floor - pos
+            if self.metrics is not None:
+                self.metrics.publish("broker.shed_records", self.shed_records,
+                                     member=self.member_id)
+            self._positions[p] = floor
+            return floor
+        return pos
+
     def poll(self, max_records: int = 512, timeout: float = 0.0) -> list[Message]:
+        if self.injected_poll_delay > 0:
+            time.sleep(self.injected_poll_delay)
         self._refresh_assignment()
         out: list[Message] = []
         deadline = time.monotonic() + timeout
@@ -144,7 +191,18 @@ class Consumer:
                 budget = max_records - len(out)
                 if budget <= 0:
                     break
-                recs = self.cluster.read(self.group.topic, p, pos, budget)
+                if self.max_lag is not None:
+                    pos = self._shed_locked(p, pos)
+                try:
+                    recs = self.cluster.read(self.group.topic, p, pos, budget)
+                except BrokerUnavailable:
+                    # leader election in flight — same as "nothing yet";
+                    # the next poll retries against the promoted leader
+                    self.retries += 1
+                    if self.metrics is not None:
+                        self.metrics.publish("broker.retries", self.retries,
+                                             member=self.member_id)
+                    continue
                 for r in recs:
                     val = _deserialize(r.value) if self.deserialize else r.value
                     out.append(Message(p, r.offset, r.timestamp, val))

@@ -37,6 +37,7 @@ class PartitionLog:
         max_buffer_bytes: int = 1 << 30,
         retention_bytes: int | None = None,
         backpressure: str = "block",  # "block" | "drop" | "error"
+        base_offset: int = 0,
     ):
         self.topic = topic
         self.partition = partition
@@ -45,7 +46,9 @@ class PartitionLog:
         self.backpressure = backpressure
         self.stats = PartitionStats()
         self._records: list[Record] = []
-        self._base_offset = 0  # offset of _records[0]
+        #: offset of _records[0]; a non-zero start keeps the offset space
+        #: monotonic when a replacement log is created after data loss
+        self._base_offset = base_offset
         self._bytes = 0
         self._lock = threading.Lock()
         self._data_ready = threading.Condition(self._lock)
@@ -120,6 +123,23 @@ class PartitionLog:
                 self._records = self._records[cut:]
                 self._base_offset += cut
                 self._space_ready.notify_all()
+
+    # ---- replication (follower side) ----------------------------------------
+
+    def replicate_from(self, leader: "PartitionLog") -> None:
+        """Catch this log up to an exact copy of ``leader`` (bootstrap of a
+        fresh follower, or re-replication after a node loss). Records are
+        immutable, so sharing them with the leader is safe; subsequent
+        appends to either log do not alias the other's tail."""
+        with leader._lock:
+            records = list(leader._records)
+            base = leader._base_offset
+            nbytes = leader._bytes
+        with self._lock:
+            self._records = records
+            self._base_offset = base
+            self._bytes = nbytes
+            self._data_ready.notify_all()
 
     # ---- introspection ----------------------------------------------------------
 

@@ -1,7 +1,18 @@
-"""Producer: partition routing, serialization, rate control, metrics."""
+"""Producer: partition routing, serialization, rate control, retry, metrics.
+
+Fault tolerance (docs/faults.md): ``send`` retries through transient
+:class:`BrokerUnavailable` windows (leader election after a node loss) with
+jittered exponential backoff, bounded by ``retry_timeout``; ``send_timeout``
+additionally bounds the *total* time a single send may block — including a
+stalled broker :class:`TokenBucket` — raising a typed
+:class:`BrokerTimeout` instead of hanging. Retries are counted in
+``retries`` and published as the ``broker.retries`` gauge when a metrics
+bus is attached.
+"""
 from __future__ import annotations
 
 import itertools
+import random
 import threading
 import time
 import zlib
@@ -10,6 +21,7 @@ from typing import Any
 import numpy as np
 
 from repro.broker.cluster import BrokerCluster
+from repro.broker.errors import BrokerTimeout, BrokerUnavailable
 from repro.broker.records import Record, encode_array, encode_msg
 
 
@@ -22,17 +34,32 @@ class Producer:
         serializer: str = "npy",  # "npy" | "msgpack" | "raw"
         compress: bool = False,
         rate_msgs_per_s: float | None = None,
+        send_timeout: float | None = None,
+        retry_timeout: float = 10.0,
+        metrics: Any | None = None,
+        seed: int | None = None,
     ):
         self.cluster = cluster
         self.topic = topic
         self.serializer = serializer
         self.compress = compress
         self.rate = rate_msgs_per_s
+        #: overall deadline for one ``send`` (token-bucket stalls included);
+        #: None = block as long as it takes, the seed behavior
+        self.send_timeout = send_timeout
+        #: how long to keep retrying through BrokerUnavailable before
+        #: giving up with BrokerTimeout
+        self.retry_timeout = retry_timeout
+        #: duck-typed MetricsBus: broker.retries published when set
+        self.metrics = metrics
+        self._rng = random.Random(seed)
         self._rr = itertools.count()
         self._last_send = 0.0
         self._lock = threading.Lock()
         self.sent_records = 0
         self.sent_bytes = 0
+        #: sends that hit a transient failover window and were reattempted
+        self.retries = 0
 
     def _partition_for(self, key: bytes | None) -> int:
         n = self.cluster.topic(self.topic).n_partitions
@@ -57,8 +84,35 @@ class Producer:
         payload = self._serialize(value)
         rec = Record(payload, key, timestamp if timestamp is not None else time.time())
         part = self._partition_for(key)
-        offset = self.cluster.append(self.topic, part, rec)
+        offset = self._append_with_retry(part, rec)
         if offset >= 0:
             self.sent_records += 1
             self.sent_bytes += rec.size()
         return offset
+
+    def _append_with_retry(self, part: int, rec: Record) -> int:
+        """Append, riding out failover blackouts with jittered exponential
+        backoff. An offset is returned only once the record is on every
+        replica (acks=all), so a retried send never loses an acked record."""
+        now = time.monotonic()
+        deadline = None if self.send_timeout is None else now + self.send_timeout
+        retry_until = now + self.retry_timeout
+        if deadline is not None:
+            retry_until = min(retry_until, deadline)
+        backoff = 0.005
+        while True:
+            try:
+                return self.cluster.append(self.topic, part, rec, deadline=deadline)
+            except BrokerUnavailable:
+                self.retries += 1
+                if self.metrics is not None:
+                    self.metrics.publish("broker.retries", self.retries)
+                now = time.monotonic()
+                if now >= retry_until:
+                    raise BrokerTimeout(
+                        f"{self.topic}[{part}]: still unavailable after "
+                        f"{self.retry_timeout:.1f}s of retries") from None
+                sleep = min(backoff * (0.5 + self._rng.random()), retry_until - now)
+                if sleep > 0:
+                    time.sleep(sleep)
+                backoff = min(backoff * 2, 0.25)

@@ -150,10 +150,13 @@ class PilotComputeService:
     """Entry point (paper Listing 2): ``PilotComputeService().submit_pilot(pcd)``."""
 
     def __init__(self, devices: list | None = None, *, provision_delay_per_node: float = 0.0,
+                 heartbeat_interval: float = 0.2, heartbeat_timeout: float = 2.0,
                  metrics: Any | None = None):
         self.pool = DevicePool(devices)
         self.pilots: list[Pilot] = []
-        self.monitor = HeartbeatMonitor()
+        #: heartbeat kwargs are tunable so chaos tests / reconcilers can run
+        #: with sub-second failure detection instead of the 2s default
+        self.monitor = HeartbeatMonitor(heartbeat_interval, heartbeat_timeout)
         #: emulates the scheduler/bootstrap latency of real clusters (Fig. 6)
         self.provision_delay_per_node = provision_delay_per_node
         #: duck-typed MetricsBus (repro.elastic.metrics); pool gauges are
@@ -237,8 +240,9 @@ class PilotComputeService:
         if self.provision_delay_per_node:
             time.sleep(self.provision_delay_per_node * pcd.number_of_nodes)
 
-    def _release(self, pilot: Pilot) -> None:
-        self.monitor.unwatch(pilot)
+    def _release(self, pilot: Pilot, *, unwatch: bool = True) -> None:
+        if unwatch:
+            self.monitor.unwatch(pilot)
         self.pool.release(pilot.lease)
         with self._lock:
             if pilot in self.pilots:
@@ -248,14 +252,21 @@ class PilotComputeService:
     # -- fault injection / recovery (tests + FT benchmarks) --------------------
 
     def inject_failure(self, pilot: Pilot) -> None:
-        """Simulate an agent crash: heartbeats stop, plugin is notified."""
+        """Simulate an agent crash: heartbeats stop, plugin is notified.
+
+        The lease is released, but the pilot stays *watched*: the monitor
+        detects the stale heartbeat after ``heartbeat_timeout``, fires its
+        ``on_failure`` callbacks (how a :class:`repro.pipeline.runner.
+        StageReconciler` learns a stage pilot died), then unwatches it.
+        Releasing used to unwatch immediately, which silently disabled
+        every monitor callback for injected failures."""
         self.monitor.mark_dead(pilot)
         pilot.state = PilotState.FAILED
         root = pilot.parent if pilot.parent is not None else pilot
         try:
             root.plugin.on_failure(pilot.lease)
         finally:
-            self._release(pilot)
+            self._release(pilot, unwatch=False)
 
     def cancel(self) -> None:
         if self.arbiter is not None:

@@ -22,6 +22,19 @@ Conventions (all optional — the bus is schemaless):
   on every rescale (docs/state.md)
 * ``workers.alive``/``workers.restarts`` gauges, per-stream — the mp
   executor's worker-process health (docs/workers.md)
+* ``workers.restart_backoff_ms`` gauge, per-stream — the delay the most
+  recent supervised respawn waited (restart-storm throttling)
+* ``broker.retries``/``broker.failovers``/``broker.lost_records`` —
+  fault-tolerance counters: producer/consumer retries through failover
+  blackouts, leader promotions after a broker-node loss, and retained
+  acked records dropped because a partition's only replica died (stays 0
+  with ``replication_factor >= 2``); docs/faults.md
+* ``broker.shed_records`` counter, per-member — records skipped by a
+  ``max_lag``-bounded consumer's degraded mode instead of unbounded lag
+* ``stream.recoveries``/``stream.recovery_ms`` and
+  ``pipeline.stage_recoveries``/``pipeline.stage_recovery_ms`` —
+  crash-recovery counts and latency (ContinuousStream.recover /
+  StageReconciler)
 * ``stream.latency_p50``/``stream.latency_p99`` gauges (seconds) — rolling
   per-batch compute-latency quantiles. The micro-batch engine publishes
   per-stream; the continuous engine's mp executor publishes per *worker*

@@ -16,6 +16,7 @@ whose owner changed: ``rescale()`` quiesces the record loop (state lock +
 """
 from __future__ import annotations
 
+import pickle
 import threading
 import time
 from typing import Any, Callable
@@ -28,8 +29,9 @@ from repro.core.plugin import Lease, ManagerPlugin, register_plugin
 # for backward compatibility
 from repro.elastic.metrics import ContinuousStats, MetricsBus
 from repro.state import DEFAULT_PARTITIONS, MigrationReport, PartitionedStateStore, StateMigrator
+from repro.state.store import StatePartition, deserialize_partition, serialize_partition
 from repro.streaming.windows import SessionWindow, WatermarkTracker
-from repro.workers.proto import OP_APPEND, OP_LATE, OP_MERGE, OP_OBSERVE
+from repro.workers.proto import OP_APPEND, OP_LATE, OP_MERGE, OP_OBSERVE, SNAPSHOT
 from repro.workers.runtime import WorkerRuntime
 
 EXECUTORS = ("inline", "mp")
@@ -73,6 +75,7 @@ class ContinuousStream:
         state_dir: str | None = None,
         executor: str = "inline",
         worker_options: dict | None = None,
+        checkpoint_every: int = 0,
     ):
         if executor not in EXECUTORS:
             raise ValueError(
@@ -109,6 +112,19 @@ class ContinuousStream:
         self._worker_options = dict(worker_options or {})
         #: report of the most recent rescale migration (None before any)
         self.last_migration: MigrationReport | None = None
+        #: records between crash checkpoints (``sckpt_*`` spools holding all
+        #: partitions + stream-global meta); 0 disables them. Required for
+        #: :meth:`recover` to resume from mid-stream instead of offset 0.
+        self.checkpoint_every = int(checkpoint_every)
+        #: successful :meth:`recover` calls / latency of the last one
+        self.recoveries = 0
+        self.last_recovery_ms: float | None = None
+        self._since_ckpt = 0
+        self._ckpt_seq = 0
+        # windows the pre-crash incarnation already emitted past the restored
+        # checkpoint: the replay re-fires them, the emit is suppressed, and
+        # fired_windows is not re-counted — zero lost, zero duplicated
+        self._skip_emits = 0
         # quiesce lock: the record loop holds it around ingest+fire, and
         # rescale() takes it to snapshot/migrate — an in-flight process()
         # call can never race a partition hand-off (regression-tested)
@@ -141,13 +157,21 @@ class ContinuousStream:
         self.stats.records += 1
         self.stats.per_record_latency.append(time.time() - ts)
 
+    def _emit_fired(self, out: Any) -> None:
+        """Deliver one fired window's output — unless it is part of the
+        replay prefix a recovery re-fires (already emitted pre-crash)."""
+        if self._skip_emits > 0:
+            self._skip_emits -= 1
+            return
+        self.emit(out)
+        self.stats.fired_windows += 1
+
     def _fire_ready(self) -> None:
         wm = self.watermarks.watermark
         fired = self.store.pop_ready(wm)
         for key, w, msgs in fired:
             out = self.window_fn(key, w, msgs)
-            self.emit(out)
-            self.stats.fired_windows += 1
+            self._emit_fired(out)
         if fired:
             if isinstance(self.assigner, SessionWindow):
                 # prune closed sessions from the assigner alongside their
@@ -192,8 +216,7 @@ class ContinuousStream:
         wm = self.watermarks.watermark
         fired = self.runtime.submit(ops, wm)
         for key, w, out in fired:
-            self.emit(out)
-            self.stats.fired_windows += 1
+            self._emit_fired(out)
         if fired:
             if isinstance(self.assigner, SessionWindow):
                 self.assigner.close_before(wm)
@@ -215,6 +238,10 @@ class ContinuousStream:
                         for m in msgs:
                             self._ingest(m)
                         self._fire_ready()
+                    if msgs and self.checkpoint_every:
+                        self._since_ckpt += len(msgs)
+                        if self._since_ckpt >= self.checkpoint_every:
+                            self._checkpoint_locked()
                 if msgs:
                     self.consumer.commit()
                     if self.metrics is not None:
@@ -298,6 +325,110 @@ class ContinuousStream:
             self.runtime.shutdown()
         if self._error:
             raise self._error
+
+    # -- crash / recovery (repro.faults; docs/faults.md) ------------------------
+
+    def _checkpoint_locked(self) -> None:
+        """Spool a consistent cut of the whole stream — every state
+        partition plus the stream-global meta a restart cannot rederive
+        (consumer positions, watermark, counters, session assigner state).
+        Caller holds ``_state_lock``; positions reflect the just-processed
+        batch, so restoring the spool and seeking to its positions replays
+        nothing twice and skips nothing."""
+        if self.runtime is not None:
+            payloads: dict[int, bytes] = {}
+            for sup in self.runtime._sups:
+                payloads.update(sup.request(
+                    SNAPSHOT,
+                    {"pids": self.runtime._pids_of(sup), "release": False}))
+        else:
+            payloads = {pid: serialize_partition(part)
+                        for pid, part in self.store.partitions.items()}
+        meta = pickle.dumps({
+            "positions": self.consumer.positions(),
+            "max_ts": self.watermarks._max_ts,
+            "records": self.stats.records,
+            "late": self.stats.late_records,
+            "fired": self.stats.fired_windows,
+            "sessions": (dict(self.assigner._sessions)
+                         if isinstance(self.assigner, SessionWindow) else None),
+            "assignment": dict(self.store.assignment),
+        })
+        self._ckpt_seq += 1
+        self.migrator.write_spool(payloads, f"sckpt_{self._ckpt_seq:06d}",
+                                  meta=meta)
+        self.migrator._gc_spools("sckpt_")
+        self._since_ckpt = 0
+
+    def crash(self) -> None:
+        """Abrupt pilot death (fault injection): the record loop stops
+        wherever it is — no final commit, no checkpoint, and, unlike
+        :meth:`stop`, no spool cleanup (``recover()`` needs it). An mp
+        executor's worker processes die with their pilot (SIGKILL)."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        if self.runtime is not None:
+            for sup in list(self.runtime._sups):
+                sup.kill()
+            self.runtime.shutdown()
+            self.runtime = None
+
+    def recover(self) -> float:
+        """Bring a crashed stream back: restore every partition and the
+        stream-global meta from the latest ``sckpt_*`` spool, seek the
+        consumer to the checkpoint's positions, and restart the loop (an mp
+        executor respawns its workers, seeded from the restored store).
+        Windows fired between the checkpoint and the crash re-fire during
+        replay with their emit suppressed (``_skip_emits``), so downstream
+        sees each firing exactly once. Without any checkpoint the stream
+        restarts from the earliest retained offsets — same exactly-once
+        argument, longer replay. Returns the recovery latency in ms."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("recover() on a live stream — crash() first")
+        t0 = time.perf_counter()
+        spool = self.migrator.latest_spool("sckpt_")
+        if spool is not None:
+            payloads = self.migrator.read_spool(spool)
+            meta = pickle.loads(self.migrator.read_meta(spool))
+            self.store.assignment = dict(meta["assignment"])
+            for pid, data in payloads.items():
+                part = deserialize_partition(data)
+                self.store.partitions[pid] = part
+            for p, off in meta["positions"].items():
+                self.consumer.seek(p, off)
+            self.watermarks._max_ts = meta["max_ts"]
+            self._skip_emits = max(self.stats.fired_windows - meta["fired"], 0)
+            self.stats.records = meta["records"]
+            self.stats.late_records = meta["late"]
+            if isinstance(self.assigner, SessionWindow):
+                self.assigner._sessions = dict(meta["sessions"] or {})
+        else:
+            # nothing spooled yet: full replay from the log's earliest
+            topic = self.cluster.topic(self.topic)
+            for p in list(self.consumer.positions()):
+                self.consumer.seek(p, topic.partitions[p].earliest)
+            self.store.partitions = {
+                p: StatePartition(p) for p in range(self.store.n_partitions)
+            }
+            self.watermarks._max_ts = float("-inf")
+            self._skip_emits = self.stats.fired_windows
+            self.stats.records = 0
+            self.stats.late_records = 0
+            if isinstance(self.assigner, SessionWindow):
+                self.assigner._sessions = {}
+        self._stop.clear()
+        self._error = None
+        self.start()  # re-creates the mp runtime (seeded from the store)
+        self.recoveries += 1
+        self.last_recovery_ms = (time.perf_counter() - t0) * 1e3
+        if self.metrics is not None:
+            self.metrics.publish("stream.recoveries", self.recoveries,
+                                 stream=self.metrics_label)
+            self.metrics.publish("stream.recovery_ms", self.last_recovery_ms,
+                                 stream=self.metrics_label)
+        return self.last_recovery_ms
 
     def lag(self) -> dict[int, int]:
         """Records behind per partition (same shape as the micro-batch

@@ -1,0 +1,18 @@
+"""repro.faults — deterministic seeded fault injection (docs/faults.md).
+
+The chaos harness for the robustness layer: declare *what* breaks and
+*when* (in the stream's logical coordinates — record counts or
+watermarks) in a :class:`FaultSchedule`, bind it to a live pipeline with a
+:class:`FaultInjector`, and assert the run's outputs are bit-identical to
+a fault-free baseline (tests/test_chaos_faults.py).
+"""
+from repro.faults.injector import FaultEvent, FaultInjector
+from repro.faults.schedule import KINDS, FaultSchedule, FaultSpec
+
+__all__ = [
+    "KINDS",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultSchedule",
+    "FaultSpec",
+]

@@ -35,7 +35,8 @@ from repro.pipeline.spec import (
 _STAGE_FIELDS = {
     "engine", "nodes", "cores_per_node", "group", "output_topic", "emits",
     "batch_interval", "max_batch_records", "backpressure", "window",
-    "state_partitions", "executor", "priority", "share", "colocate_with",
+    "state_partitions", "executor", "checkpoint_every", "priority", "share",
+    "colocate_with",
 }
 _SOURCE_FIELDS = {
     "rate_msgs_per_s", "total_messages", "n_producers", "seed", "rate_schedule",
@@ -98,9 +99,11 @@ class Pipeline:
     # -- broker ---------------------------------------------------------------
 
     def broker(self, *, nodes: int = 1, framework: str = "kafka",
-               io_rate_per_node: float | None = None) -> "Pipeline":
+               io_rate_per_node: float | None = None,
+               replication_factor: int = 1) -> "Pipeline":
         self._broker = BrokerSpec(nodes=nodes, framework=framework,
-                                  io_rate_per_node=io_rate_per_node)
+                                  io_rate_per_node=io_rate_per_node,
+                                  replication_factor=replication_factor)
         return self
 
     def broker_elastic(self, *, policy: str = "broker_saturation",
@@ -205,6 +208,7 @@ class Pipeline:
             framework=self._broker.framework,
             topics=dict(self._topics),
             io_rate_per_node=self._broker.io_rate_per_node,
+            replication_factor=self._broker.replication_factor,
             elastic=self._broker_elastic,
         )
         return PipelineSpec(
@@ -222,6 +226,17 @@ class Pipeline:
             errors.append("pipeline needs a non-empty name")
         if self._broker.nodes < 1:
             errors.append(f"broker needs >= 1 node, got {self._broker.nodes}")
+        if self._broker.replication_factor < 1:
+            errors.append(
+                "broker replication_factor must be >= 1, got "
+                f"{self._broker.replication_factor}"
+            )
+        elif self._broker.replication_factor > self._broker.nodes:
+            errors.append(
+                f"broker replication_factor {self._broker.replication_factor} "
+                f"exceeds node count {self._broker.nodes}: replicas live on "
+                "distinct nodes"
+            )
         for name, parts in self._topics.items():
             if parts < 1:
                 errors.append(f"topic {name!r} needs >= 1 partition, got {parts}")
@@ -290,6 +305,17 @@ class Pipeline:
                 errors.append(
                     f"stage {s.name!r}: state_partitions must be >= 1, "
                     f"got {s.state_partitions}"
+                )
+            if s.checkpoint_every < 0:
+                errors.append(
+                    f"stage {s.name!r}: checkpoint_every must be >= 0, "
+                    f"got {s.checkpoint_every}"
+                )
+            elif s.checkpoint_every and s.engine != "continuous":
+                errors.append(
+                    f"stage {s.name!r}: checkpoint_every only applies to the "
+                    "continuous engine (the micro-batch engine checkpoints "
+                    "per batch already)"
                 )
 
         by_stage_name = {s.name: s for s in self._stages}
@@ -430,6 +456,7 @@ def _stage_kwargs(s: StageSpec) -> dict:
         "backpressure": s.backpressure, "window": dict(s.window),
         "state_partitions": s.state_partitions,
         "executor": s.executor,
+        "checkpoint_every": s.checkpoint_every,
         "options": dict(s.options),
         "priority": s.priority, "share": s.share,
         "colocate_with": s.colocate_with,

@@ -51,6 +51,93 @@ class BrokerStallProbe:
         return min(max(frac, 0.0), 1.0)
 
 
+class StageReconciler:
+    """Pilot-crash recovery for continuous stages (docs/faults.md).
+
+    Subscribes to the service's :class:`HeartbeatMonitor` failure
+    callbacks; when a *managed* stage pilot goes stale — a real crash
+    (``inject_failure``) or a false positive (the ``drop_heartbeats``
+    fault) — it fences first and recovers second:
+
+    1. ``stream.crash()`` — idempotent; after this the old incarnation
+       cannot emit, so a false positive costs one recovery, never a
+       duplicate firing;
+    2. ``service.submit_pilot(pcd)`` — a replacement pilot on fresh
+       devices;
+    3. attach the stream to the new pilot's plugin and ``stream.
+       recover()`` — state restored from the latest ``sckpt_*`` spool
+       (``StageSpec.checkpoint_every``), consumer re-seeked, replay with
+       emit suppression: zero lost, zero duplicated firings.
+
+    Usable standalone (chaos tests bind it to hand-built streams) or via
+    ``PipelineRun``, which manages every continuous stage that checkpoints.
+    """
+
+    def __init__(self, service: PilotComputeService, *, bus: MetricsBus | None = None,
+                 on_recovered: Callable[[str, Any], None] | None = None):
+        self.service = service
+        self.bus = bus
+        self.on_recovered = on_recovered
+        self.recoveries = 0
+        #: (stage name, recovery latency ms) per recovery, oldest first
+        self.log: list[tuple[str, float]] = []
+        #: recovery failures (kept, not raised — callbacks run on the
+        #: monitor thread, which swallows exceptions)
+        self.errors: list[BaseException] = []
+        self._managed: dict[int, tuple[str, Any, dict]] = {}
+        self._closed = False
+        self._lock = threading.Lock()
+        service.monitor.on_failure(self._on_failure)
+
+    def manage(self, name: str, pilot: Any, stream: Any, pcd: dict) -> None:
+        """Watch ``pilot``; on failure, reprovision from ``pcd`` and
+        recover ``stream`` onto the replacement."""
+        with self._lock:
+            self._managed[id(pilot)] = (name, stream, dict(pcd))
+
+    def unmanage(self, pilot: Any) -> None:
+        with self._lock:
+            self._managed.pop(id(pilot), None)
+
+    def close(self) -> None:
+        """Stop reconciling (the monitor keeps its callback — it just
+        no-ops); teardown calls this before stopping streams so a stop
+        is not mistaken for a crash."""
+        with self._lock:
+            self._closed = True
+            self._managed.clear()
+
+    def _on_failure(self, pilot: Any) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            entry = self._managed.pop(id(pilot), None)
+        if entry is None:
+            return  # not ours (another run's pilot on a shared service)
+        name, stream, pcd = entry
+        t0 = time.perf_counter()
+        try:
+            stream.crash()  # fencing — safe and idempotent on a dead stream
+            new_pilot = self.service.submit_pilot(pcd)
+            plugin = new_pilot.plugin
+            if hasattr(plugin, "streams") and stream not in plugin.streams:
+                plugin.streams.append(stream)
+            stream.recover()
+        except BaseException as e:
+            self.errors.append(e)
+            return
+        ms = (time.perf_counter() - t0) * 1e3
+        self.recoveries += 1
+        self.log.append((name, ms))
+        if self.bus is not None:
+            self.bus.publish("pipeline.stage_recoveries", self.recoveries,
+                             stage=name)
+            self.bus.publish("pipeline.stage_recovery_ms", ms, stage=name)
+        self.manage(name, new_pilot, stream, pcd)
+        if self.on_recovered is not None:
+            self.on_recovered(name, new_pilot)
+
+
 class SinkRunner:
     """Terminal consumer: drains a topic, applying a fn or collecting."""
 
@@ -127,6 +214,9 @@ class PipelineRun:
         #: the service's single ResourceArbiter — set during provisioning
         #: iff any stage (or the broker) is elastic
         self.arbiter = None
+        #: pilot-crash recovery — set during provisioning iff any
+        #: continuous stage checkpoints (StageSpec.checkpoint_every)
+        self.reconciler: StageReconciler | None = None
         self.cluster = None
         self._streams: dict[str, Any] = {}
         self._pilots: dict[str, Any] = {}
@@ -209,8 +299,12 @@ class PipelineRun:
         if not self._own_service:
             self._push("broker", broker_pilot.cancel)
         self.cluster = broker_pilot.get_context()
+        self.cluster.metrics = self.bus  # broker.failovers/lost_records
         for topic, parts in spec.broker.topics.items():
-            self.cluster.create_topic(topic, parts)
+            self.cluster.create_topic(
+                topic, parts,
+                replication_factor=min(spec.broker.replication_factor,
+                                       spec.broker.nodes))
 
         # host stages before their co-located guests (a guest reuses the
         # host's pilot, so the host must exist first)
@@ -231,6 +325,25 @@ class PipelineRun:
             stream = self._streams[stage.name]
             stream.start()
             self._push(f"stream:{stage.name}", stream.stop)
+
+        recoverable = [
+            s for s in spec.stages
+            if s.engine == "continuous" and s.checkpoint_every
+            and s.colocate_with is None
+        ]
+        if recoverable:
+            self.reconciler = StageReconciler(
+                self.service, bus=self.bus,
+                on_recovered=lambda name, pilot: self._pilots.__setitem__(
+                    name, pilot))
+            for stage in recoverable:
+                self.reconciler.manage(
+                    stage.name, self._pilots[stage.name],
+                    self._streams[stage.name],
+                    {"number_of_nodes": stage.nodes,
+                     "cores_per_node": stage.cores_per_node,
+                     "type": "flink"})
+            self._push("reconciler", self.reconciler.close)
 
         for stage in spec.stages:
             if stage.elastic is not None:
@@ -313,6 +426,7 @@ class PipelineRun:
                 metrics_label=label,
                 n_partitions=stage.state_partitions,
                 executor=stage.executor,
+                checkpoint_every=stage.checkpoint_every,
             )
         self._streams[stage.name] = stream
 

@@ -38,6 +38,10 @@ class BrokerSpec:
     topics: dict = field(default_factory=dict)
     #: per-node byte-rate budget (None = unlimited), paper's 1-broker bottleneck
     io_rate_per_node: float | None = None
+    #: replicas per topic partition (leader + followers on distinct nodes,
+    #: acks=all): >= 2 makes acked records survive a broker-node loss with
+    #: automatic leader failover; see docs/faults.md
+    replication_factor: int = 1
     #: node-unit ElasticSpec (min_devices/max_devices count broker *nodes*)
     elastic: "ElasticSpec | None" = None
 
@@ -128,6 +132,10 @@ class StageSpec:
     #: default) or "mp" (one supervised worker process per owner device,
     #: failure isolation + restart with state recovery; docs/workers.md)
     executor: str = "inline"
+    #: records between crash checkpoints (continuous engine): > 0 spools
+    #: full-stream checkpoints so a crashed stage pilot is reprovisioned by
+    #: the StageReconciler and resumes mid-stream (docs/faults.md); 0 = off
+    checkpoint_every: int = 0
     #: processor factory kwargs
     options: dict = field(default_factory=dict)
     elastic: ElasticSpec | None = None

@@ -173,17 +173,45 @@ class StateMigrator:
 
     # -- spool primitives (shared with the worker runtime's checkpoints) -------
 
-    def write_spool(self, payloads: Mapping[int, bytes], name: str) -> str:
+    def write_spool(self, payloads: Mapping[int, bytes], name: str,
+                    *, meta: bytes | None = None) -> str:
         """Atomically write one ``pid -> serialized partition`` set under
         ``name`` in the spool root; returns the committed path. Used for
         migration spools and for the worker runtime's periodic restart
-        checkpoints (``wckpt_*``)."""
+        checkpoints (``wckpt_*``). ``meta`` rides along as a sidecar blob
+        (``meta.bin`` — outside the partition namespace) for stream-global
+        state a checkpoint must carry: consumer positions, watermark,
+        counters (ContinuousStream's ``sckpt_*`` crash checkpoints)."""
         spool = os.path.join(self._spool_root(), name)
         with atomic_dir(spool) as tmp:
             for pid, data in payloads.items():
                 with open(os.path.join(tmp, f"p{pid:05d}.bin"), "wb") as f:
                     f.write(data)
+            if meta is not None:
+                with open(os.path.join(tmp, "meta.bin"), "wb") as f:
+                    f.write(meta)
         return spool
+
+    def read_meta(self, spool: str) -> bytes | None:
+        """The sidecar meta blob of a committed spool (None if absent)."""
+        path = os.path.join(spool, "meta.bin")
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            return f.read()
+
+    def latest_spool(self, prefix: str) -> str | None:
+        """Path of the newest committed spool with ``prefix`` (crash
+        recovery entry point: sequence-numbered names sort temporally)."""
+        if self.directory is None or not os.path.isdir(self.directory):
+            return None
+        spools = sorted(
+            n for n in os.listdir(self.directory)
+            if n.startswith(prefix) and not n.endswith(".tmp")
+        )
+        if not spools:
+            return None
+        return os.path.join(self.directory, spools[-1])
 
     def read_spool(self, spool: str,
                    pids: Sequence[int] | None = None) -> dict[int, bytes]:

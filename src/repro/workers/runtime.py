@@ -67,6 +67,8 @@ class WorkerRuntime:
         heartbeat_interval: float = 0.1,
         heartbeat_timeout: float = 2.0,
         max_restarts: int = 3,
+        restart_backoff: float = 0.05,
+        restart_backoff_cap: float = 2.0,
     ):
         self.store = store
         self.window_fn = window_fn
@@ -80,6 +82,9 @@ class WorkerRuntime:
         #: it above the worst-case per-window compute time
         self.heartbeat_timeout = heartbeat_timeout
         self.max_restarts = max(int(max_restarts), 1)
+        #: supervisor respawn backoff (see WorkerSupervisor.respawn)
+        self.restart_backoff = restart_backoff
+        self.restart_backoff_cap = restart_backoff_cap
         self.monitor: HeartbeatMonitor | None = None
         self.buffered_windows = 0
         self._ctx = None
@@ -143,7 +148,9 @@ class WorkerRuntime:
     def _spawn_for(self, owner: Any) -> WorkerSupervisor:
         sup = WorkerSupervisor(self._next_wid, owner, self.window_fn,
                                monitor=self.monitor, ctx=self._ctx,
-                               batch_timeout=self.batch_timeout)
+                               batch_timeout=self.batch_timeout,
+                               restart_backoff=self.restart_backoff,
+                               restart_backoff_cap=self.restart_backoff_cap)
         self._next_wid += 1
         sup.spawn()
         self._sups.append(sup)
@@ -368,6 +375,10 @@ class WorkerRuntime:
         self.bus.publish("workers.alive",
                          sum(1 for sup in self._sups if sup.alive()), **labels)
         self.bus.publish("workers.restarts", self.restarts, **labels)
+        if self._sups:
+            self.bus.publish(
+                "workers.restart_backoff_ms",
+                max(sup.last_backoff_s for sup in self._sups) * 1e3, **labels)
 
     def publish(self) -> None:
         """Per-worker + aggregate latency quantiles and worker health —

@@ -35,14 +35,27 @@ class WorkerSupervisor:
     def __init__(self, worker_id: int, owner: Any,
                  window_fn: Callable[[Any, tuple, list], Any], *,
                  monitor: HeartbeatMonitor, ctx,
-                 batch_timeout: float = 30.0):
+                 batch_timeout: float = 30.0,
+                 restart_backoff: float = 0.05,
+                 restart_backoff_cap: float = 2.0):
         self.worker_id = worker_id
         self.owner = owner  # the pilot device whose partitions this worker runs
         self.window_fn = window_fn
         self.monitor = monitor
         self.ctx = ctx
         self.batch_timeout = batch_timeout
+        #: base/cap of the exponential respawn backoff: a worker that keeps
+        #: dying (a crash *storm* — e.g. OOM on the first batch every time)
+        #: respawns at most every ``restart_backoff_cap`` seconds instead of
+        #: in a tight fork loop; the first restart of a streak is immediate
+        self.restart_backoff = restart_backoff
+        self.restart_backoff_cap = restart_backoff_cap
         self.restarts = 0
+        #: the delay the most recent respawn waited (the
+        #: ``workers.restart_backoff_ms`` gauge source)
+        self.last_backoff_s = 0.0
+        self._streak = 0
+        self._last_respawn = 0.0
         self.channel: WorkerChannel | None = None
         self.process = None
         self._beat = None
@@ -79,9 +92,25 @@ class WorkerSupervisor:
     def respawn(self) -> "WorkerSupervisor":
         """Replace the incarnation: fresh process, fresh queues, fresh
         heartbeat. The caller (runtime) re-CONFIGUREs, RESTOREs from the
-        last checkpoint and replays the journal."""
+        last checkpoint and replays the journal.
+
+        Back-to-back respawns back off exponentially (capped): the streak
+        resets once the previous incarnation survived a while, so an
+        isolated crash still recovers immediately while a restart storm is
+        throttled (regression-tested in tests/test_faults.py)."""
+        now = time.monotonic()
+        if now - self._last_respawn > self.restart_backoff_cap * 2:
+            self._streak = 0
+        delay = 0.0 if self._streak == 0 else min(
+            self.restart_backoff_cap,
+            self.restart_backoff * (2 ** (self._streak - 1)))
+        self._streak += 1
+        self._last_respawn = now
+        self.last_backoff_s = delay
         self.restarts += 1
         self.kill()
+        if delay > 0:
+            time.sleep(delay)
         return self.spawn()
 
     def stop(self, timeout: float = 2.0) -> None:

@@ -1,0 +1,202 @@
+"""Fault-injection chaos matrix (slow): faults must be unobservable.
+
+A ContinuousStream consumes a deterministic MASS source while a seeded
+:class:`repro.faults.FaultInjector` attacks the run at fixed *logical*
+trigger points — a broker-node kill with a leader-election blackout, a
+pilot crash recovered by the :class:`StageReconciler`, a slow consumer.
+Every attacked run must fire the exact same windows with bit-identical
+per-window aggregates as the fault-free inline baseline, with zero acked
+records lost.
+
+Determinism follows tests/test_chaos_rescale.py: logical event time, a
+single topic partition, and a single keyed producer keep the per-record
+ingest order identical across runs — replication (acks=all) preserves it
+across a failover, and crash recovery replays it from the checkpoint cut.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import PilotComputeService
+from repro.elastic.metrics import MetricsBus
+from repro.faults import FaultInjector, FaultSchedule
+from repro.miniapps import RateStepScenario, SourceConfig
+from repro.miniapps.mass import StreamSource
+from repro.pipeline.runner import StageReconciler
+from repro.streaming import TumblingWindow
+
+N_MSGS = 1500
+DT = 0.01  # logical seconds between events
+WINDOW = 0.1
+N_KEYS = 5
+BASE_TS = 1000.0
+EXPECTED_WINDOWS = (int(N_MSGS * DT / WINDOW) - 1) * N_KEYS
+
+
+class _DeterministicSource(StreamSource):
+    """Payload and event time are pure functions of the message index."""
+
+    def make_message(self, rng, i):
+        return np.array([i % N_KEYS, float(i) * 1.25], dtype=np.float64)
+
+    def make_timestamp(self, rng, i):
+        return BASE_TS + i * DT
+
+
+def _window_fn(key, w, msgs):
+    vals = np.array([m.value[1] for m in msgs], dtype=np.float64)
+    # np.sum order-sensitivity is the point: any loss, duplication, or
+    # reorder through a failover/recovery shows up in the low bits
+    return key, w, float(np.sum(vals)), len(msgs)
+
+
+def _run(schedule=None, *, seed=0, broker_nodes=1, replication_factor=1,
+         executor="inline", checkpoint_every=0, reconcile=False):
+    """One full stream run under an optional fault schedule; returns
+    (results, info) where info carries the observability counters the
+    matrix asserts on."""
+    svc = PilotComputeService(devices=list(range(10)),
+                              heartbeat_interval=0.05, heartbeat_timeout=0.25)
+    bus = MetricsBus()
+    results: dict = {}
+    injector = reconciler = None
+    flink_pcd = {"number_of_nodes": 1, "cores_per_node": 2, "type": "flink"}
+    try:
+        kafka = svc.submit_pilot({"number_of_nodes": broker_nodes, "type": "kafka"})
+        cluster = kafka.get_context()
+        cluster.metrics = bus
+        cluster.create_topic("chaos", 1, replication_factor=replication_factor)
+        flink = svc.submit_pilot(flink_pcd)
+        stream = flink.get_context().stream(
+            cluster, "chaos", group="g",
+            assigner=TumblingWindow(WINDOW),
+            window_fn=_window_fn,
+            key_fn=lambda m: int(m.value[0]),
+            emit=lambda out: results.__setitem__((out[0], out[1]), (out[2], out[3])),
+            metrics=bus,
+            executor=executor,
+            checkpoint_every=checkpoint_every,
+            worker_options={"snapshot_every": 8} if executor == "mp" else None,
+        )
+        stream.start()
+        if reconcile:
+            reconciler = StageReconciler(svc, bus=bus)
+            reconciler.manage("chaos", flink, stream, flink_pcd)
+        source = _DeterministicSource(cluster, SourceConfig(
+            "chaos", total_messages=N_MSGS, n_producers=1, keyed=True, seed=7))
+        scenario = RateStepScenario(
+            source, [(0.4, 1000.0), (0.4, 4000.0), (0.4, 1800.0)], loop=True)
+        source.start()
+        scenario.start()
+        if schedule is not None:
+            injector = FaultInjector(schedule, seed=seed, cluster=cluster,
+                                     topic="chaos", stream=stream,
+                                     service=svc, pilot=flink).start()
+        deadline = time.monotonic() + 90
+        while stream.stats.fired_windows < EXPECTED_WINDOWS:
+            assert time.monotonic() < deadline, (
+                f"{stream.stats.fired_windows}/{EXPECTED_WINDOWS} windows fired; "
+                f"events={injector.events if injector else []}; "
+                f"recovery errors={reconciler.errors if reconciler else []}")
+            time.sleep(0.02)
+        scenario.stop()
+        source.stop()
+        if injector is not None:
+            injector.stop()
+        if reconciler is not None:
+            reconciler.close()
+        stream.stop()
+        info = {
+            "fired": stream.stats.fired_windows,
+            "late": stream.stats.late_records,
+            "failovers": cluster.failovers,
+            "lost": cluster.lost_records,
+            "prod_retries": sum(p.retries for p in source.producers),
+            "cons_retries": stream.consumer.retries,
+            "poll_delay": stream.consumer.injected_poll_delay,
+            "recoveries": stream.recoveries,
+            "stage_recoveries": reconciler.recoveries if reconciler else 0,
+            "events": list(injector.events) if injector else [],
+            "bus": bus,
+        }
+    finally:
+        svc.cancel()
+    return results, info
+
+
+def _assert_bit_identical(base_results, other_results, label):
+    assert other_results.keys() == base_results.keys(), label
+    for kw, (total, count) in base_results.items():
+        o_total, o_count = other_results[kw]
+        assert o_count == count, f"{label}: window {kw}: {o_count} != {count} records"
+        assert o_total == total, f"{label}: window {kw}: aggregate drifted"
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    results, info = _run(None)
+    assert info["late"] == 0 and info["fired"] == EXPECTED_WINDOWS
+    return results
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed,at_records", [(1, 400), (2, 700), (3, 1000)])
+def test_kill_broker_node_failover_is_unobservable(baseline, seed, at_records):
+    """Leader loss mid-stream: a follower is promoted, producers/consumers
+    retry through the election blackout, and no acked record is lost."""
+    sched = FaultSchedule().kill_broker_node(
+        at_records=at_records, node="leader", blackout=0.25)
+    results, info = _run(sched, seed=seed, broker_nodes=3, replication_factor=2)
+    assert info["failovers"] >= 1, info["events"]
+    assert info["lost"] == 0, "replicated topic lost acked records"
+    assert info["cons_retries"] >= 1, (
+        "the blackout was never observed by the consumer")
+    assert info["late"] == 0 and info["fired"] == EXPECTED_WINDOWS
+    assert info["bus"].value("broker.failovers") >= 1
+    _assert_bit_identical(baseline, results, f"broker kill seed={seed}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed,at_records", [(1, 350), (2, 650), (3, 950)])
+def test_kill_pilot_recovers_via_reconciler(baseline, seed, at_records):
+    """Pilot crash mid-stream: heartbeats go stale, the StageReconciler
+    reprovisions and the stream resumes from its checkpoint spool with
+    replayed firings suppressed — zero lost, zero duplicated."""
+    sched = FaultSchedule().kill_pilot(at_records=at_records)
+    results, info = _run(sched, seed=seed, checkpoint_every=100, reconcile=True)
+    assert info["recoveries"] >= 1, info["events"]
+    assert info["stage_recoveries"] >= 1
+    assert info["late"] == 0 and info["fired"] == EXPECTED_WINDOWS
+    assert info["bus"].value("pipeline.stage_recoveries", stage="chaos") >= 1
+    _assert_bit_identical(baseline, results, f"pilot kill seed={seed}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed,at_records,delay", [
+    (1, 300, 0.02), (2, 600, 0.03), (3, 900, 0.02)])
+def test_slow_consumer_degrades_without_drift(baseline, seed, at_records, delay):
+    """An injected poll delay slows processing; the fault expires on
+    schedule and outputs stay identical (graceful degradation, no loss)."""
+    sched = FaultSchedule().slow_consumer(
+        at_records=at_records, delay=delay, until_records=at_records + 300)
+    results, info = _run(sched, seed=seed)
+    fired = [e for e in info["events"] if e.detail != "reverted"]
+    reverted = [e for e in info["events"] if e.detail == "reverted"]
+    assert len(fired) == 1 and len(reverted) == 1, info["events"]
+    assert info["poll_delay"] == 0.0  # expiry actually reverted the knob
+    assert info["late"] == 0 and info["fired"] == EXPECTED_WINDOWS
+    _assert_bit_identical(baseline, results, f"slow consumer seed={seed}")
+
+
+@pytest.mark.slow
+def test_kill_pilot_mp_executor_recovers(baseline):
+    """Same pilot-crash recovery with the multiprocess executor: the crash
+    SIGKILLs the worker processes; recover() restores the host store from
+    the spool and reseeds a fresh worker fleet from it."""
+    sched = FaultSchedule().kill_pilot(at_records=600)
+    results, info = _run(sched, seed=5, executor="mp",
+                         checkpoint_every=100, reconcile=True)
+    assert info["recoveries"] >= 1, info["events"]
+    assert info["late"] == 0 and info["fired"] == EXPECTED_WINDOWS
+    _assert_bit_identical(baseline, results, "mp pilot kill")

@@ -1,0 +1,355 @@
+"""Fault-tolerance units: schedule DSL, injector, broker retry/timeout/
+shedding, supervisor restart backoff, inline crash/recover.
+
+The end-to-end seeded chaos matrix (fault runs bit-identical to a
+fault-free baseline) lives in tests/test_chaos_faults.py; this module
+pins the individual mechanisms it composes.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.broker import (
+    BrokerCluster,
+    BrokerTimeout,
+    BrokerUnavailable,
+    Consumer,
+    ConsumerGroup,
+    Producer,
+)
+from repro.core import PilotComputeService
+from repro.engines.continuous import ContinuousStream
+from repro.faults import KINDS, FaultInjector, FaultSchedule, FaultSpec
+from repro.streaming import TumblingWindow
+from repro.workers.supervisor import WorkerSupervisor
+
+
+# ---------------------------------------------------------------------------
+# schedule DSL
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_parse_text_form():
+    sched = FaultSchedule.parse(
+        """
+        # leader election mid-stream
+        kill_broker_node @records=500 node=leader blackout=0.2
+        kill_pilot       @records=900 ; slow_consumer @watermark=1003.5 delay=0.01 until_records=1200
+        """
+    )
+    assert len(sched) == 3
+    kb, kp, sc = list(sched)
+    assert kb.kind == "kill_broker_node"
+    assert kb.at_records == 500
+    assert kb.params == {"node": "leader", "blackout": 0.2}
+    assert kp.kind == "kill_pilot" and kp.at_records == 900 and kp.params == {}
+    assert sc.at_watermark == 1003.5
+    assert sc.params == {"delay": 0.01, "until_records": 1200}
+
+
+def test_schedule_fluent_matches_parsed():
+    parsed = FaultSchedule.parse("delay_io @records=10 delay=0.005 until_records=20")
+    built = FaultSchedule().delay_io(at_records=10, delay=0.005, until_records=20)
+    assert list(parsed) == list(built)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("explode", at_records=1)
+    with pytest.raises(ValueError, match="exactly one"):
+        FaultSpec("kill_pilot")  # no trigger
+    with pytest.raises(ValueError, match="exactly one"):
+        FaultSpec("kill_pilot", at_records=1, at_watermark=2.0)
+    with pytest.raises(ValueError, match="cannot parse token"):
+        FaultSchedule.parse("kill_pilot @records=1 garbage")
+    assert set(KINDS) >= {"kill_broker_node", "kill_pilot", "slow_consumer"}
+
+
+def test_spec_due_and_trigger():
+    by_rec = FaultSpec("kill_pilot", at_records=100)
+    assert not by_rec.due(99, float("inf"))
+    assert by_rec.due(100, float("-inf"))
+    assert by_rec.trigger == "records>=100"
+    by_wm = FaultSpec("kill_pilot", at_watermark=5.0)
+    assert not by_wm.due(10**9, 4.9)
+    assert by_wm.due(0, 5.0)
+    assert by_wm.trigger == "watermark>=5.0"
+
+
+# ---------------------------------------------------------------------------
+# injector
+# ---------------------------------------------------------------------------
+
+
+def test_injector_fires_once_and_reverts_timed_faults():
+    cluster = BrokerCluster(1)
+    records = [0]
+    sched = FaultSchedule().delay_io(at_records=10, delay=0.003, until_records=20)
+    inj = FaultInjector(sched, cluster=cluster, records_fn=lambda: records[0],
+                        watermark_fn=lambda: float("-inf")).start()
+    time.sleep(0.02)
+    assert cluster.io_delay == 0.0 and inj.fired == 0
+    records[0] = 10
+    deadline = time.monotonic() + 2
+    while cluster.io_delay == 0.0 and time.monotonic() < deadline:
+        time.sleep(0.002)
+    assert cluster.io_delay == pytest.approx(0.003)
+    records[0] = 25  # past until_records -> revert
+    assert inj.wait(2.0), "injector never drained its schedule"
+    assert cluster.io_delay == 0.0
+    assert inj.fired == 1
+    kinds = [(e.kind, e.detail) for e in inj.events]
+    assert kinds[0][0] == "delay_io" and "io delay" in kinds[0][1]
+    assert kinds[1] == ("delay_io", "reverted")
+    inj.stop()
+
+
+def test_injector_action_override_and_failure_capture():
+    seen = []
+    sched = (FaultSchedule()
+             .kill_pilot(at_records=1)
+             .drop_heartbeats(at_records=1))
+    inj = FaultInjector(
+        sched, records_fn=lambda: 5, watermark_fn=lambda: 0.0,
+        actions={"kill_pilot": lambda injector, spec: seen.append(spec.kind) or "custom"},
+    ).start()
+    assert inj.wait(2.0)
+    inj.stop()
+    assert seen == ["kill_pilot"]
+    by_kind = {e.kind: e.detail for e in inj.events}
+    assert by_kind["kill_pilot"] == "custom"
+    # drop_heartbeats has no service bound -> the action raises, the poller
+    # survives and records the failure instead of dying silently
+    assert by_kind["drop_heartbeats"].startswith("action failed:")
+
+
+def test_injector_picks_partition_leader():
+    cluster = BrokerCluster(3)
+    cluster.create_topic("t", 1, replication_factor=2)
+    inj = FaultInjector(FaultSchedule(), cluster=cluster, topic="t")
+    spec = FaultSpec("kill_broker_node", at_records=1, params={"node": "leader"})
+    assert inj._pick_node(spec) == cluster.topic("t").leaders[0]
+    spec = FaultSpec("kill_broker_node", at_records=1, params={"node": 2})
+    assert inj._pick_node(spec) == 2
+
+
+def test_injector_slow_consumer_sets_and_expires_poll_delay():
+    cluster = BrokerCluster(1)
+    cluster.create_topic("t", 1)
+    c = Consumer(cluster, ConsumerGroup(cluster, "g", "t"), "m")
+    records = [50]
+    sched = FaultSchedule().slow_consumer(at_records=10, delay=0.004, until_records=100)
+    inj = FaultInjector(sched, cluster=cluster, consumer=c,
+                        records_fn=lambda: records[0],
+                        watermark_fn=lambda: float("-inf")).start()
+    deadline = time.monotonic() + 2
+    while c.injected_poll_delay == 0.0 and time.monotonic() < deadline:
+        time.sleep(0.002)
+    assert c.injected_poll_delay == pytest.approx(0.004)
+    records[0] = 120
+    assert inj.wait(2.0)
+    assert c.injected_poll_delay == 0.0
+    inj.stop()
+
+
+# ---------------------------------------------------------------------------
+# broker: replication failover, retry, typed timeouts, shedding
+# ---------------------------------------------------------------------------
+
+
+def test_producer_send_timeout_raises_typed_error_on_stalled_bucket():
+    # 40 B/s budget vs a ~200 B record: the token bucket can never clear it
+    # inside the deadline, so send must fail fast instead of hanging
+    cluster = BrokerCluster(1, io_rate_per_node=40.0)
+    cluster.create_topic("t", 1)
+    prod = Producer(cluster, "t", serializer="raw", send_timeout=0.15)
+    t0 = time.monotonic()
+    with pytest.raises(BrokerTimeout):
+        prod.send(b"x" * 200)
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_producer_retries_through_failover_blackout():
+    cluster = BrokerCluster(3)
+    cluster.create_topic("t", 1, replication_factor=2)
+    prod = Producer(cluster, "t", serializer="raw", seed=1)
+    for i in range(50):
+        prod.send(bytes([i]))
+    cluster.fail_node(cluster.topic("t").leaders[0], blackout=0.15)
+    # the send lands on the promoted leader after riding out the election
+    assert prod.send(b"after") == 50
+    assert prod.retries >= 1
+    assert cluster.failovers >= 1
+    assert cluster.lost_records == 0
+    recs = cluster.read("t", 0, 0, 1000)
+    assert len(recs) == 51  # every acked record survived the node loss
+
+
+def test_producer_retry_exhaustion_raises_broker_timeout():
+    cluster = BrokerCluster(3)
+    cluster.create_topic("t", 1, replication_factor=2)
+    prod = Producer(cluster, "t", serializer="raw", retry_timeout=0.2, seed=1)
+    prod.send(b"x")
+    cluster.fail_node(cluster.topic("t").leaders[0], blackout=5.0)
+    t0 = time.monotonic()
+    with pytest.raises(BrokerTimeout):
+        prod.send(b"y")
+    assert 0.1 < time.monotonic() - t0 < 2.0
+    assert prod.retries >= 2  # backed off and reattempted before giving up
+
+
+def test_consumer_poll_treats_blackout_as_empty():
+    cluster = BrokerCluster(2)
+    cluster.create_topic("t", 1, replication_factor=2)
+    prod = Producer(cluster, "t", serializer="raw")
+    for i in range(10):
+        prod.send(bytes([i]))
+    c = Consumer(cluster, ConsumerGroup(cluster, "g", "t"), "m", deserialize=False)
+    cluster.fail_node(cluster.topic("t").leaders[0], blackout=0.2)
+    assert c.poll(100) == []  # election in progress: no data, no exception
+    assert c.retries >= 1
+    deadline = time.monotonic() + 2
+    out = []
+    while len(out) < 10 and time.monotonic() < deadline:
+        out.extend(c.poll(100))
+    assert [m.value for m in out] == [bytes([i]) for i in range(10)]
+
+
+def test_consumer_max_lag_sheds_instead_of_falling_behind():
+    cluster = BrokerCluster(1)
+    cluster.create_topic("t", 1)
+    prod = Producer(cluster, "t", serializer="raw")
+    for _ in range(100):
+        prod.send(b"x")
+    c = Consumer(cluster, ConsumerGroup(cluster, "g", "t"), "m",
+                 deserialize=False, max_lag=10)
+    msgs = c.poll(1000)
+    assert len(msgs) == 10
+    assert msgs[0].offset == 90  # jumped to high_watermark - max_lag
+    assert c.shed_records == 90
+
+
+# ---------------------------------------------------------------------------
+# supervisor restart backoff (restart-storm regression)
+# ---------------------------------------------------------------------------
+
+
+class _NullMonitor:
+    def watch(self, *a, **kw):
+        pass
+
+    def unwatch(self, *a, **kw):
+        pass
+
+
+class _FakeSup(WorkerSupervisor):
+    """Backoff policy under test, process machinery stubbed out."""
+
+    def spawn(self):
+        return self
+
+    def kill(self):
+        pass
+
+
+def test_respawn_storm_backs_off_exponentially_with_cap():
+    sup = _FakeSup(0, owner=None, window_fn=None, monitor=_NullMonitor(),
+                   ctx=None, restart_backoff=0.01, restart_backoff_cap=0.04)
+    t0 = time.monotonic()
+    delays = [sup.respawn().last_backoff_s for _ in range(5)]
+    storm = time.monotonic() - t0
+    # first restart of a streak is immediate; then 0.01, 0.02, 0.04, 0.04 (cap)
+    assert delays == [0.0, 0.01, 0.02, 0.04, 0.04]
+    assert sup.restarts == 5
+    assert storm >= 0.11  # the storm actually waited, not just recorded
+    # a worker that survived a while gets an immediate restart again
+    time.sleep(sup.restart_backoff_cap * 2 + 0.02)
+    assert sup.respawn().last_backoff_s == 0.0
+
+
+def test_isolated_crash_restarts_immediately():
+    sup = _FakeSup(0, owner=None, window_fn=None, monitor=_NullMonitor(),
+                   ctx=None, restart_backoff=0.5, restart_backoff_cap=5.0)
+    t0 = time.monotonic()
+    sup.respawn()
+    assert time.monotonic() - t0 < 0.1
+    assert sup.last_backoff_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# pilot failure detection + inline crash/recover
+# ---------------------------------------------------------------------------
+
+
+def test_inject_failure_fires_monitor_callbacks():
+    svc = PilotComputeService(devices=[0, 1], heartbeat_interval=0.05,
+                              heartbeat_timeout=0.1)
+    try:
+        pilot = svc.submit_pilot({"number_of_nodes": 1, "type": "flink"})
+        failed = []
+        svc.monitor.on_failure(failed.append)
+        svc.inject_failure(pilot)
+        deadline = time.monotonic() + 3
+        while not failed and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert failed and failed[0] is pilot, (
+            "monitor never reported the injected failure to its callbacks")
+    finally:
+        svc.cancel()
+
+
+def _collecting_stream(cluster, results, **kw):
+    return ContinuousStream(
+        cluster, "t", group="g", assigner=TumblingWindow(0.1),
+        window_fn=lambda key, w, msgs: (key, w, len(msgs)),
+        key_fn=lambda m: m.value[0] % 3,
+        emit=lambda out: results.__setitem__((out[0], out[1]), out[2]),
+        **kw,
+    )
+
+
+def test_inline_crash_recover_is_bit_identical():
+    def run(crash_at):
+        cluster = BrokerCluster(1)
+        cluster.create_topic("t", 1)
+        from repro.broker.records import Record
+        for i in range(300):
+            # payloads 0..2 never collide with the serde tag bytes (N/M/Z)
+            cluster.append("t", 0, Record(bytes([i % 3]), None, 1000.0 + i * 0.01))
+        results: dict = {}
+        stream = _collecting_stream(cluster, results, checkpoint_every=50)
+        stream.start()
+        deadline = time.monotonic() + 30
+        if crash_at is not None:
+            while stream.stats.fired_windows < crash_at:
+                assert time.monotonic() < deadline
+                time.sleep(0.002)
+            stream.crash()
+            assert stream._thread is None
+            ms = stream.recover()
+            assert ms >= 0.0 and stream.recoveries == 1
+        # 300 records x 0.01s span 3.0s -> 29 closed 0.1s windows x 3 keys
+        while stream.stats.fired_windows < 29 * 3:
+            assert time.monotonic() < deadline, (
+                f"{stream.stats.fired_windows}/87 windows fired")
+            time.sleep(0.002)
+        stream.stop()
+        assert stream.stats.fired_windows == 87
+        return results
+
+    base = run(None)
+    recovered = run(crash_at=30)
+    assert recovered == base  # zero lost, zero duplicated firings
+
+
+def test_recover_refuses_running_stream():
+    cluster = BrokerCluster(1)
+    cluster.create_topic("t", 1)
+    stream = _collecting_stream(cluster, {}, checkpoint_every=10)
+    stream.start()
+    try:
+        with pytest.raises(RuntimeError):
+            stream.recover()
+    finally:
+        stream.stop()
