@@ -1,0 +1,154 @@
+"""Data-plane throughput: log vs shared-memory transport (docs/transport.md).
+
+A :class:`repro.miniapps.DetectorSimSource` streams fixed-size detector
+frames (128x128 uint16, the instrument-ingest shape the transport exists
+for) through one topic while 1/2/4 independent consumer groups drain it
+concurrently — the multi-pipeline fan-out of a beamline deployment. Both
+runs use the same batch API (``Producer.send_batch``); the only variable
+is the data plane:
+
+* ``log``  — payloads ride the partition log: one npy serialize + append
+  per message on the way in, one npy decode + copy per message out.
+* ``shm``  — payloads ride a mounted ring: one columnar frame write per
+  batch, per-message records carry ~40-byte slot handles, and consumers
+  decode ``numpy.frombuffer`` views (zero per-message serde or copies).
+
+Reports msgs/s and MB/s per (transport, consumer-count) cell plus the
+shm/log speedup per cell, and asserts nothing was lost: every consumer
+group receives every message (``lost_records == 0``).
+
+Writes ``BENCH_transport.json`` next to this file; ``--quick`` trims the
+message count for CI bench-smoke. Acceptance bar: >= 5x msgs/s on shm at
+equal payload size (``speedup_ok`` in the JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+from repro.broker.cluster import BrokerCluster
+from repro.broker.consumer import Consumer, ConsumerGroup
+from repro.miniapps import DetectorSimSource, SourceConfig
+from repro.transport import ShmTransport
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_transport.json")
+
+NY, NX, DTYPE = 128, 128, "uint16"
+FRAME_BYTES = NY * NX * 2
+# pulse-train batching: detectors ship a train of frames per message
+# burst (32 here), which is also what amortizes the per-batch frame
+# encode + slot write on the shm path
+FRAMES_PER_BATCH = 32
+N_MSGS = 8000
+QUICK_MSGS = 2048
+
+
+def _drain(consumer: Consumer, want: int, counts: list, idx: int) -> None:
+    got = 0
+    while got < want:
+        msgs = consumer.poll(max_records=512, timeout=0.5)
+        if msgs:
+            got += len(msgs)
+            consumer.commit()  # progress drives shm slot reclaim
+    counts[idx] = got
+
+
+def _run(n_msgs: int, *, transport: str, n_consumers: int) -> dict:
+    cluster = BrokerCluster(1)
+    try:
+        if transport == "shm":
+            # a slot holds one train (32 x 32KB + header)
+            shm = ShmTransport(slot_bytes=1 << 21, n_slots=64)
+            cluster.attach_transport(shm)
+        cluster.create_topic("frames", 1)
+        if transport == "shm":
+            cluster.transport.mount("frames")
+        # groups register before the stream starts: a registered group with
+        # no progress holds every slot, so no consumer can miss a frame
+        consumers = [
+            Consumer(cluster, ConsumerGroup(cluster, f"g{i}", "frames"),
+                     f"m{i}", zero_copy=(transport == "shm"))
+            for i in range(n_consumers)
+        ]
+        counts = [0] * n_consumers
+        threads = [
+            threading.Thread(target=_drain, args=(c, n_msgs, counts, i),
+                             daemon=True)
+            for i, c in enumerate(consumers)
+        ]
+        source = DetectorSimSource(
+            cluster, SourceConfig("frames", total_messages=n_msgs),
+            ny=NY, nx=NX, dtype=DTYPE, frames_per_batch=FRAMES_PER_BATCH)
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        source.start()
+        for t in threads:
+            t.join(timeout=600)
+        wall_s = time.perf_counter() - t0
+        source.stop()
+        for c in consumers:
+            c.close()
+        lost = (cluster.lost_records
+                + sum(n_msgs - got for got in counts))
+        return {
+            "transport": transport,
+            "n_consumers": n_consumers,
+            "msgs": n_msgs,
+            "wall_s": wall_s,
+            "msgs_per_s": n_msgs / wall_s,
+            "mb_per_s": n_msgs * FRAME_BYTES * n_consumers / wall_s / 1e6,
+            "lost_records": lost,
+        }
+    finally:
+        cluster.close()
+
+
+def run(quick: bool = False, repeats: int = 3) -> dict:
+    n_msgs = QUICK_MSGS if quick else N_MSGS
+    rows = []
+    for transport in ("log", "shm"):
+        for n_consumers in (1, 2, 4):
+            samples = [_run(n_msgs, transport=transport,
+                            n_consumers=n_consumers) for _ in range(repeats)]
+            row = dict(max(samples, key=lambda s: s["msgs_per_s"]))
+            row["lost_records"] = sum(s["lost_records"] for s in samples)
+            rows.append(row)
+            print(f"{transport:>4} x{n_consumers} consumers: "
+                  f"{row['msgs_per_s']:10.0f} msgs/s  "
+                  f"{row['mb_per_s']:8.1f} MB/s  ({row['wall_s']:.2f} s)")
+    by = {(r["transport"], r["n_consumers"]): r["msgs_per_s"] for r in rows}
+    speedups = {str(n): by[("shm", n)] / by[("log", n)] for n in (1, 2, 4)}
+    print("shm/log speedup: " + "  ".join(
+        f"x{n}={s:.1f}x" for n, s in speedups.items()))
+    return {
+        "benchmark": "transport",
+        "payload": {"ny": NY, "nx": NX, "dtype": DTYPE,
+                    "frame_bytes": FRAME_BYTES,
+                    "frames_per_batch": FRAMES_PER_BATCH},
+        "repeats": repeats,
+        "results": rows,
+        "speedup_shm_vs_log": speedups,
+        "speedup_ok": speedups["1"] >= 5.0,
+        "lost_records": sum(r["lost_records"] for r in rows),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    out = run(quick=args.quick, repeats=args.repeats)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out} (speedup_ok={out['speedup_ok']}, "
+          f"lost_records={out['lost_records']})")
+
+
+if __name__ == "__main__":
+    main()

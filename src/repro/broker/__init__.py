@@ -1,6 +1,6 @@
 """Log-based message broker (Kafka analog) — host-side data plane."""
 from repro.broker.cluster import BrokerCluster, BrokerNode, Topic
-from repro.broker.consumer import Consumer, ConsumerGroup, Message
+from repro.broker.consumer import Consumer, ConsumerGroup, Message, PolledBatch
 from repro.broker.errors import BrokerError, BrokerTimeout, BrokerUnavailable
 from repro.broker.log import BackpressureError, PartitionLog
 from repro.broker.producer import Producer
@@ -17,6 +17,7 @@ __all__ = [
     "ConsumerGroup",
     "Message",
     "PartitionLog",
+    "PolledBatch",
     "Producer",
     "Record",
     "Topic",

@@ -150,6 +150,16 @@ class BrokerCluster:
         #: ``io_stall_seconds`` monotonic across scale-downs (a drop would
         #: read as a spurious idle tick to the saturation probe)
         self._retired_stall = 0.0
+        #: optional shm data plane (repro.transport.ShmTransport); payload
+        #: bytes then bypass the token buckets by design (same-host shared
+        #: memory is not NIC traffic) but its allocator stall joins
+        #: ``io_stall_seconds`` so saturation stays observable
+        self.transport = None
+        #: (group, topic, partition) -> replay horizon pinned by a
+        #: checkpointing stream: slots must survive down to it, not just to
+        #: the commit position, or crash recovery would replay into
+        #: reclaimed frames
+        self._replay_floors: dict[tuple[str, str, int], int] = {}
         for _ in range(n_nodes):
             self.add_node()
 
@@ -273,11 +283,64 @@ class BrokerCluster:
         """Total time producers/consumers have spent blocked in this
         cluster's token buckets (cumulative and monotonic — removed nodes'
         stall is retained). The broker demand estimator differentiates
-        this into a stall *fraction*."""
+        this into a stall *fraction*. With an shm transport attached, slot
+        allocator stall is included — a full ring is saturation too."""
         with self._lock:
-            return self._retired_stall + sum(
+            stall = self._retired_stall + sum(
                 n.bucket.stall_seconds for n in self._nodes.values()
             )
+            transport = self.transport
+        if transport is not None:
+            stall += transport.stall_seconds()
+        return stall
+
+    # ---- shm data plane (repro.transport) -----------------------------------
+
+    def attach_transport(self, transport) -> None:
+        """Mount an :class:`~repro.transport.ShmTransport` as this
+        cluster's data plane. Topics the transport serves carry slot
+        handles instead of payloads (rf==1 only; see docs/transport.md)."""
+        with self._lock:
+            self.transport = transport
+
+    def set_replay_floor(self, group: str, topic: str,
+                         positions: dict[int, int]) -> None:
+        """A checkpointing stream pins its replay horizon: ring slots for
+        ``topic`` stay live down to these offsets even as commits advance,
+        so ``recover()`` can re-read from the checkpoint cut. Advancing
+        the floor triggers a reclaim pass."""
+        with self._lock:
+            for p, off in positions.items():
+                self._replay_floors[(group, topic, p)] = off
+        for p in positions:
+            self._maybe_reclaim(topic, p)
+
+    def _reclaim_floor_locked(self, topic: str, partition: int) -> int | None:
+        """min over registered consumer groups of each group's replay
+        floor (when pinned) else its committed offset. None = no group is
+        consuming this topic yet — nothing may be reclaimed."""
+        floor = None
+        for ref in self._groups:
+            g = ref()
+            if g is None or g.topic != topic:
+                continue
+            key = (g.group, topic, partition)
+            pos = self._replay_floors.get(key)
+            if pos is None:
+                pos = self._offsets.get((g.group, topic, partition))
+            if pos is None:
+                return None  # registered group with no progress: hold all
+            floor = pos if floor is None else min(floor, pos)
+        return floor
+
+    def _maybe_reclaim(self, topic: str, partition: int) -> None:
+        with self._lock:
+            transport = self.transport
+            if transport is None or not transport.serves(topic):
+                return
+            floor = self._reclaim_floor_locked(topic, partition)
+        if floor is not None:
+            transport.reclaim_below(topic, partition, floor)
 
     # ---- fault-injection knobs (repro.faults) --------------------------------
 
@@ -327,10 +390,25 @@ class BrokerCluster:
     def delete_topic(self, name: str) -> None:
         with self._lock:
             topic = self._topics.pop(name, None)
+            transport = self.transport
             if topic:
                 for logs in topic.replicas.values():
                     for log in logs.values():
                         log.close()
+        if topic and transport is not None:
+            transport.unmount(name)  # unlinks the shm segment
+
+    def close(self) -> None:
+        """Tear the cluster down: close every log and unlink every shm
+        segment (the pilot plugin's cancel path — a crashed or cancelled
+        broker must not leak /dev/shm entries)."""
+        for name in list(self._topics):
+            self.delete_topic(name)
+        with self._lock:
+            transport = self.transport
+            self.transport = None
+        if transport is not None:
+            transport.close()
 
     # ---- data plane (throttled by node budgets) ------------------------------
 
@@ -381,6 +459,35 @@ class BrokerCluster:
                     log.append(record, timeout=remaining if deadline is not None else 30.0)
             return offset
 
+    def append_many(self, topic: str, partition: int, records: list[Record],
+                    *, deadline: float | None = None) -> list[int]:
+        """Batch append with the same acks-all / blackout / epoch-recheck
+        contract as :meth:`append`, but one token-bucket consume and one
+        log lock acquisition for the whole batch."""
+        if not records:
+            return []
+        if self.io_delay:
+            time.sleep(self.io_delay)
+        with self._lock:
+            bucket, _, _, epoch = self._resolve_locked(topic, partition)
+        total = sum(r.size() for r in records)
+        if bucket is not None:
+            bucket.consume(total, deadline=deadline)
+        with self._lock:
+            self._check_available_locked(topic, partition)
+            _, leader, followers, epoch2 = self._resolve_locked(topic, partition)
+            if epoch2 != epoch:
+                raise BrokerUnavailable(
+                    f"{topic}[{partition}]: placement changed mid-append")
+            remaining = None if deadline is None else max(deadline - time.monotonic(), 0.001)
+            timeout = remaining if deadline is not None else 30.0
+            offsets = leader.append_many(records, timeout=timeout,
+                                         total_bytes=total)
+            appended = [r for r, o in zip(records, offsets) if o >= 0]
+            for log in followers:  # acks=all: replicate before returning
+                log.append_many(appended, timeout=timeout)
+            return offsets
+
     def read(self, topic: str, partition: int, offset: int, max_records: int = 512,
              timeout: float = 0.0):
         if self.io_delay:
@@ -397,6 +504,10 @@ class BrokerCluster:
     def commit(self, group: str, topic: str, partition: int, offset: int) -> None:
         with self._lock:
             self._offsets[(group, topic, partition)] = offset
+            has_transport = self.transport is not None
+        if has_transport:
+            # consumer progress is what frees ring slots (docs/transport.md)
+            self._maybe_reclaim(topic, partition)
 
     def committed(self, group: str, topic: str, partition: int) -> int:
         with self._lock:

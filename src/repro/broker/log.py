@@ -57,37 +57,83 @@ class PartitionLog:
 
     # ---- producer side -----------------------------------------------------
 
-    def append(self, record: Record, *, timeout: float | None = 30.0) -> int:
+    def _append_one_locked(self, record: Record, deadline: float | None,
+                           timeout: float | None) -> int:
+        """Backpressure + append for one record; caller holds the lock."""
         size = record.size()
+        while self._bytes + size > self.max_buffer_bytes and not self._closed:
+            if self.backpressure == "drop":
+                self.stats.dropped_records += 1
+                return -1
+            if self.backpressure == "error":
+                raise BackpressureError(
+                    f"{self.topic}[{self.partition}] full ({self._bytes}B buffered)"
+                )
+            t0 = time.monotonic()
+            remaining = None if deadline is None else deadline - t0
+            if remaining is not None and remaining <= 0:
+                raise BackpressureError(
+                    f"{self.topic}[{self.partition}] blocked > {timeout}s"
+                )
+            self._space_ready.wait(timeout=remaining if remaining else 1.0)
+            self.stats.blocked_seconds += time.monotonic() - t0
+        if self._closed:
+            raise RuntimeError("partition closed")
+        offset = self._base_offset + len(self._records)
+        rec = Record(record.value, record.key, record.timestamp, offset, record.headers)
+        self._records.append(rec)
+        self._bytes += size
+        self.stats.appended_records += 1
+        self.stats.appended_bytes += size
+        return offset
+
+    def append(self, record: Record, *, timeout: float | None = 30.0) -> int:
         with self._lock:
             deadline = None if timeout is None else time.monotonic() + timeout
-            while self._bytes + size > self.max_buffer_bytes and not self._closed:
-                if self.backpressure == "drop":
-                    self.stats.dropped_records += 1
-                    return -1
-                if self.backpressure == "error":
-                    raise BackpressureError(
-                        f"{self.topic}[{self.partition}] full ({self._bytes}B buffered)"
-                    )
-                t0 = time.monotonic()
-                remaining = None if deadline is None else deadline - t0
-                if remaining is not None and remaining <= 0:
-                    raise BackpressureError(
-                        f"{self.topic}[{self.partition}] blocked > {timeout}s"
-                    )
-                self._space_ready.wait(timeout=remaining if remaining else 1.0)
-                self.stats.blocked_seconds += time.monotonic() - t0
-            if self._closed:
-                raise RuntimeError("partition closed")
-            offset = self._base_offset + len(self._records)
-            rec = Record(record.value, record.key, record.timestamp, offset, record.headers)
-            self._records.append(rec)
-            self._bytes += size
-            self.stats.appended_records += 1
-            self.stats.appended_bytes += size
+            offset = self._append_one_locked(record, deadline, timeout)
             self._trim_locked()
             self._data_ready.notify_all()
             return offset
+
+    def append_many(self, records: list[Record], *, timeout: float | None = 30.0,
+                    total_bytes: int | None = None) -> list[int]:
+        """Batch append under ONE lock acquisition with ONE ``notify_all``
+        — the per-record lock/notify cost is what made a naive
+        ``send_batch`` loop pointless. Offsets are contiguous (modulo
+        drop-policy ``-1`` holes); backpressure policy applies per record
+        against the shared deadline. ``total_bytes`` lets a caller that
+        already summed record sizes (the token-bucket pass) skip the
+        re-walk."""
+        with self._lock:
+            total = (sum(r.size() for r in records)
+                     if total_bytes is None else total_bytes)
+            if self._bytes + total <= self.max_buffer_bytes and not self._closed:
+                # fast path: everything fits, so skip the per-record
+                # backpressure machinery and bulk-assign offsets. Records
+                # fresh off a producer (offset -1) are adopted in place —
+                # the frozen-dataclass re-construction per record was the
+                # hottest line of the batch produce path; anything already
+                # offset-stamped (a replica pass) still gets a copy
+                base = self._base_offset + len(self._records)
+                store = self._records.append
+                for i, r in enumerate(records):
+                    if r.offset == -1:
+                        r.offset = base + i
+                        store(r)
+                    else:
+                        store(Record(r.value, r.key, r.timestamp,
+                                     base + i, r.headers))
+                self._bytes += total
+                self.stats.appended_records += len(records)
+                self.stats.appended_bytes += total
+                offsets = list(range(base, base + len(records)))
+            else:
+                deadline = None if timeout is None else time.monotonic() + timeout
+                offsets = [self._append_one_locked(r, deadline, timeout)
+                           for r in records]
+            self._trim_locked()
+            self._data_ready.notify_all()
+            return offsets
 
     def _trim_locked(self) -> None:
         while self._bytes > self.retention_bytes and len(self._records) > 1:

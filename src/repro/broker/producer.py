@@ -23,6 +23,9 @@ import numpy as np
 from repro.broker.cluster import BrokerCluster
 from repro.broker.errors import BrokerTimeout, BrokerUnavailable
 from repro.broker.records import Record, encode_array, encode_msg
+from repro.transport.frames import encode_frame
+from repro.transport.plane import pack_row, slot_record_prefix
+from repro.transport.ring import RingTimeout
 
 
 class Producer:
@@ -54,7 +57,8 @@ class Producer:
         self.metrics = metrics
         self._rng = random.Random(seed)
         self._rr = itertools.count()
-        self._last_send = 0.0
+        #: start of the next unclaimed send slot on the rate schedule
+        self._next_send = 0.0
         self._lock = threading.Lock()
         self.sent_records = 0
         self.sent_bytes = 0
@@ -74,13 +78,23 @@ class Producer:
             return encode_array(np.asarray(value), compress=self.compress)
         return encode_msg(value, compress=self.compress)
 
+    def _reserve_sends(self, n: int = 1) -> None:
+        """Rate control without the convoy: claim the next ``n`` slots on
+        the schedule *under* the lock (cheap), sleep until the claimed
+        start *outside* it — concurrent sender threads each wait for their
+        own slot instead of serializing behind one in-lock sleeper."""
+        rate = self.rate
+        if not rate:
+            return
+        with self._lock:
+            now = time.monotonic()
+            start = max(self._next_send, now)
+            self._next_send = start + n / rate
+        if start > now:
+            time.sleep(start - now)
+
     def send(self, value: Any, *, key: bytes | None = None, timestamp: float | None = None) -> int:
-        if self.rate:
-            with self._lock:
-                wait = self._last_send + 1.0 / self.rate - time.monotonic()
-                if wait > 0:
-                    time.sleep(wait)
-                self._last_send = time.monotonic()
+        self._reserve_sends()
         payload = self._serialize(value)
         rec = Record(payload, key, timestamp if timestamp is not None else time.time())
         part = self._partition_for(key)
@@ -89,6 +103,98 @@ class Producer:
             self.sent_records += 1
             self.sent_bytes += rec.size()
         return offset
+
+    def send_batch(self, values, *, key: bytes | None = None,
+                   timestamps: list[float] | None = None) -> list[int]:
+        """Send a batch as one columnar frame. On an shm-mounted rf==1
+        topic the payload is written ONCE into a ring slot and each record
+        carries only an epoch-tagged slot handle; otherwise (rf>1, no
+        transport, or a frame bigger than a slot) the copy-out fallback
+        serializes per record through the log — same offsets-per-message
+        semantics either way. The whole batch lands in one
+        :meth:`BrokerCluster.append_many` (single lock/notify)."""
+        if not len(values):
+            return []
+        n = len(values)
+        self._reserve_sends(n)
+        part = self._partition_for(key)
+        now = time.monotonic()
+        deadline = None if self.send_timeout is None else now + self.send_timeout
+        ts_list = list(timestamps) if timestamps is not None else None
+        base_ts = time.time()
+        transport = getattr(self.cluster, "transport", None)
+        ring = None
+        if transport is not None:
+            rf = self.cluster.topic(self.topic).replication_factor
+            ring = transport.use_ring(self.topic, rf)
+        if ring is not None:
+            header, parts = encode_frame(values, ts_list, key)
+            total = 4 + len(header) + sum(len(p) for p in parts)
+            if total <= ring.slot_bytes:
+                return self._send_frame(part, transport, ring, header, parts,
+                                        total, n, ts_list, base_ts, key, deadline)
+        records = [
+            Record(self._serialize(v), key,
+                   ts_list[row] if ts_list is not None else base_ts)
+            for row, v in enumerate(values)
+        ]
+        offsets = self._append_many_with_retry(part, records, deadline)
+        for rec, off in zip(records, offsets):
+            if off >= 0:
+                self.sent_records += 1
+                self.sent_bytes += rec.size()
+        return offsets
+
+    def _send_frame(self, part, transport, ring, header, parts, total, n,
+                    ts_list, base_ts, key, deadline) -> list[int]:
+        try:
+            slot, epoch = transport.write_frame(
+                self.topic, header, parts, deadline=deadline)
+        except RingTimeout as exc:
+            raise BrokerTimeout(str(exc)) from None
+        prefix = slot_record_prefix(ring.name, slot, epoch)
+        records = [
+            Record(prefix + pack_row(row), key,
+                   ts_list[row] if ts_list is not None else base_ts)
+            for row in range(n)
+        ]
+        try:
+            offsets = self._append_many_with_retry(part, records, deadline)
+        except Exception:
+            transport.release(self.topic, slot, epoch)
+            raise
+        acked = [off for off in offsets if off >= 0]
+        if not acked:
+            transport.release(self.topic, slot, epoch)
+            return offsets
+        transport.track(self.topic, part, max(acked), slot, epoch)
+        self.sent_records += len(acked)
+        self.sent_bytes += total
+        return offsets
+
+    def _append_many_with_retry(self, part: int, records: list[Record],
+                                deadline: float | None) -> list[int]:
+        retry_until = time.monotonic() + self.retry_timeout
+        if deadline is not None:
+            retry_until = min(retry_until, deadline)
+        backoff = 0.005
+        while True:
+            try:
+                return self.cluster.append_many(self.topic, part, records,
+                                                deadline=deadline)
+            except BrokerUnavailable:
+                self.retries += 1
+                if self.metrics is not None:
+                    self.metrics.publish("broker.retries", self.retries)
+                now = time.monotonic()
+                if now >= retry_until:
+                    raise BrokerTimeout(
+                        f"{self.topic}[{part}]: still unavailable after "
+                        f"{self.retry_timeout:.1f}s of retries") from None
+                sleep = min(backoff * (0.5 + self._rng.random()), retry_until - now)
+                if sleep > 0:
+                    time.sleep(sleep)
+                backoff = min(backoff * 2, 0.25)
 
     def _append_with_retry(self, part: int, rec: Record) -> int:
         """Append, riding out failover blackouts with jittered exponential

@@ -25,8 +25,12 @@ except Exception:  # pragma: no cover
     _ZSTD = _ZSTD_D = None
 
 
-@dataclass(frozen=True)
+@dataclass(slots=True)
 class Record:
+    """Treated as immutable once appended (logs share record objects
+    across replicas); ``slots`` because producers mint one per message
+    on the data-plane hot path."""
+
     value: bytes
     key: bytes | None = None
     timestamp: float = field(default_factory=time.time)

@@ -42,6 +42,13 @@ class BrokerPlugin(ManagerPlugin):
         for nid in self._lease_nodes.pop(lease.lease_id, []):
             self.cluster.fail_node(nid)
 
+    def cancel(self) -> None:
+        """Close all logs and unlink any mounted shm transport segments —
+        a cancelled (or crashed-and-cancelled) broker pilot must not leak
+        /dev/shm entries."""
+        if self.cluster is not None:
+            self.cluster.close()
+
     def get_context(self, configuration: dict | None = None) -> BrokerCluster:
         return self.cluster
 

@@ -76,12 +76,18 @@ class ContinuousStream:
         executor: str = "inline",
         worker_options: dict | None = None,
         checkpoint_every: int = 0,
+        transport: str | None = None,
     ):
         if executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r} (expected one of {EXECUTORS})")
         self.cluster = cluster
         self.topic = topic
+        #: accepted for spec symmetry with MicroBatchStream; the continuous
+        #: engine always copy-outs shm frames (it buffers records in window
+        #: state far past the reclaim floor — views would be unsound), so
+        #: "shm" changes the producer side only. See docs/transport.md.
+        self.transport = transport
         self.group = ConsumerGroup(cluster, group, topic)
         self.consumer = Consumer(cluster, self.group, member_id=f"{group}-cont")
         self.assigner = assigner
@@ -286,9 +292,27 @@ class ContinuousStream:
                 self.store, self.window_fn, migrator=self.migrator,
                 bus=self.metrics, label=self.metrics_label,
                 **self._worker_options).start()
+        if self.checkpoint_every:
+            # pin the shm reclaim floor to the replay horizon from the very
+            # first record: commits advance past records a crash would
+            # replay, and replaying into reclaimed ring slots is an error.
+            # Prefer the consumer's live positions — after recover() they
+            # hold the checkpoint cut, which sits *behind* committed — and
+            # fall back to committed for a fresh start.
+            n = self.cluster.topic(self.topic).n_partitions
+            pos = self.consumer.positions()
+            self._pin_replay_floor({
+                p: pos.get(p, self.cluster.committed(
+                    self.group.group, self.topic, p))
+                for p in range(n)})
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         return self
+
+    def _pin_replay_floor(self, positions: dict[int, int]) -> None:
+        set_floor = getattr(self.cluster, "set_replay_floor", None)
+        if set_floor is not None and positions:
+            set_floor(self.group.group, self.topic, positions)
 
     def await_windows(self, n: int, timeout: float = 30.0) -> None:
         deadline = time.monotonic() + timeout
@@ -307,6 +331,7 @@ class ContinuousStream:
             self._thread.join(timeout=5)
         if self.sync_fn is not None:  # land in-flight device work
             self.sync_fn()
+        self.consumer.release_frames()  # drop views pinning ring slots
         # cleanup under the state lock so the spool is never yanked from
         # under an in-flight rescale — but timed, so a wedged window_fn
         # (loop thread outliving the join above) cannot hang teardown;
@@ -359,6 +384,9 @@ class ContinuousStream:
                                   meta=meta)
         self.migrator._gc_spools("sckpt_")
         self._since_ckpt = 0
+        # the checkpoint is the new replay horizon: ring slots below these
+        # positions may now be reclaimed, slots above must survive a crash
+        self._pin_replay_floor(self.consumer.positions())
 
     def crash(self) -> None:
         """Abrupt pilot death (fault injection): the record loop stops

@@ -49,11 +49,18 @@ class MicroBatchStream:
         sync_fn: Callable[[], None] | None = None,
         on_rescale: Callable[[Any], Any] | None = None,
         metrics_label: str | None = None,
+        transport: str | None = None,
     ):
         self.cluster = cluster
         self.topic = topic
+        #: "shm" opts the ingest loop into zero-copy frame views — sound
+        #: for micro-batching because the batch is fully processed (and the
+        #: state checkpointed) before commit advances the reclaim floor
+        self.transport = transport
         self.group = ConsumerGroup(cluster, group, topic)
-        self.consumer = Consumer(cluster, self.group, member_id=f"{group}-engine", deserialize=deserialize)
+        self.consumer = Consumer(cluster, self.group, member_id=f"{group}-engine",
+                                 deserialize=deserialize,
+                                 zero_copy=(transport == "shm"))
         self.process_fn = process_fn
         self.state = state
         self.batch_interval = batch_interval
@@ -216,6 +223,7 @@ class MicroBatchStream:
             self._thread.join(timeout=5)
         if self.sync_fn is not None:  # land in-flight batches: final state/stats
             self.sync_fn()
+        self.consumer.release_frames()  # drop views pinning ring slots
         if self._error:
             raise self._error
 

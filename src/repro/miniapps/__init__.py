@@ -10,6 +10,7 @@ from repro.miniapps.mass import (
     StreamSource,
     TokenSource,
 )
+from repro.miniapps.detector import DetectorSimSource
 from repro.miniapps.masa import (
     PROCESSORS,
     LMServeApp,
@@ -19,6 +20,7 @@ from repro.miniapps.masa import (
 )
 
 __all__ = [
+    "DetectorSimSource",
     "KMeansClusterSource",
     "KMeansStaticSource",
     "LMServeApp",

@@ -36,8 +36,9 @@ _STAGE_FIELDS = {
     "engine", "nodes", "cores_per_node", "group", "output_topic", "emits",
     "batch_interval", "max_batch_records", "backpressure", "window",
     "state_partitions", "executor", "checkpoint_every", "priority", "share",
-    "colocate_with",
+    "colocate_with", "transport",
 }
+_TRANSPORTS = {"log", "shm"}
 _SOURCE_FIELDS = {
     "rate_msgs_per_s", "total_messages", "n_producers", "seed", "rate_schedule",
 }
@@ -100,10 +101,14 @@ class Pipeline:
 
     def broker(self, *, nodes: int = 1, framework: str = "kafka",
                io_rate_per_node: float | None = None,
-               replication_factor: int = 1) -> "Pipeline":
+               replication_factor: int = 1,
+               transport: str = "log",
+               transport_options: dict | None = None) -> "Pipeline":
         self._broker = BrokerSpec(nodes=nodes, framework=framework,
                                   io_rate_per_node=io_rate_per_node,
-                                  replication_factor=replication_factor)
+                                  replication_factor=replication_factor,
+                                  transport=transport,
+                                  transport_options=transport_options or {})
         return self
 
     def broker_elastic(self, *, policy: str = "broker_saturation",
@@ -209,6 +214,8 @@ class Pipeline:
             topics=dict(self._topics),
             io_rate_per_node=self._broker.io_rate_per_node,
             replication_factor=self._broker.replication_factor,
+            transport=self._broker.transport,
+            transport_options=dict(self._broker.transport_options),
             elastic=self._broker_elastic,
         )
         return PipelineSpec(
@@ -236,6 +243,11 @@ class Pipeline:
                 f"broker replication_factor {self._broker.replication_factor} "
                 f"exceeds node count {self._broker.nodes}: replicas live on "
                 "distinct nodes"
+            )
+        if self._broker.transport not in _TRANSPORTS:
+            errors.append(
+                f"broker: unknown transport {self._broker.transport!r} "
+                f"(expected one of {sorted(_TRANSPORTS)})"
             )
         for name, parts in self._topics.items():
             if parts < 1:
@@ -297,6 +309,18 @@ class Pipeline:
                     f"stage {s.name!r}: output_topic needs emits=True "
                     "(processor must return (state, outputs))"
                 )
+            if s.transport is not None:
+                if s.transport not in _TRANSPORTS:
+                    errors.append(
+                        f"stage {s.name!r}: unknown transport {s.transport!r} "
+                        f"(expected one of {sorted(_TRANSPORTS)})"
+                    )
+                elif s.transport == "shm" and self._broker.transport != "shm":
+                    errors.append(
+                        f"stage {s.name!r}: transport='shm' requires the "
+                        "broker to mount the shm data plane "
+                        "(broker(transport='shm'))"
+                    )
             if s.processor not in registry.known_processors():
                 errors.append(f"stage {s.name!r}: unknown processor {s.processor!r}")
             if s.share <= 0:
@@ -457,6 +481,7 @@ def _stage_kwargs(s: StageSpec) -> dict:
         "state_partitions": s.state_partitions,
         "executor": s.executor,
         "checkpoint_every": s.checkpoint_every,
+        "transport": s.transport,
         "options": dict(s.options),
         "priority": s.priority, "share": s.share,
         "colocate_with": s.colocate_with,

@@ -300,11 +300,22 @@ class PipelineRun:
             self._push("broker", broker_pilot.cancel)
         self.cluster = broker_pilot.get_context()
         self.cluster.metrics = self.bus  # broker.failovers/lost_records
+        if spec.broker.transport == "shm":
+            # mount the zero-copy data plane before any topic carries data;
+            # ring allocator stall joins io_stall_seconds, so the broker
+            # saturation probe (and elasticity) needs no special casing
+            from repro.transport import ShmTransport
+
+            transport = ShmTransport(**dict(spec.broker.transport_options))
+            self.cluster.attach_transport(transport)
+            self._push("transport", transport.close)
         for topic, parts in spec.broker.topics.items():
             self.cluster.create_topic(
                 topic, parts,
                 replication_factor=min(spec.broker.replication_factor,
                                        spec.broker.nodes))
+            if spec.broker.transport == "shm":
+                self.cluster.transport.mount(topic)
 
         # host stages before their co-located guests (a guest reuses the
         # host's pilot, so the host must exist first)
@@ -410,6 +421,7 @@ class PipelineRun:
                 sync_fn=sync_fn,
                 on_rescale=on_rescale,
                 metrics_label=label,
+                transport=stage.transport,
             )
         else:
             window_fn = proc.process if hasattr(proc, "process") else proc
@@ -427,6 +439,7 @@ class PipelineRun:
                 n_partitions=stage.state_partitions,
                 executor=stage.executor,
                 checkpoint_every=stage.checkpoint_every,
+                transport=stage.transport,
             )
         self._streams[stage.name] = stream
 

@@ -42,8 +42,19 @@ class BrokerSpec:
     #: acks=all): >= 2 makes acked records survive a broker-node loss with
     #: automatic leader failover; see docs/faults.md
     replication_factor: int = 1
+    #: data plane: "log" (payloads in the partition log, the seed behavior)
+    #: or "shm" (a shared-memory ring is mounted per topic and rf==1
+    #: payloads travel as zero-copy slot handles; docs/transport.md). With
+    #: rf > 1 the shm plane transparently copies out per record.
+    transport: str = "log"
+    #: ShmTransport kwargs (slot_bytes, n_slots) when transport == "shm"
+    transport_options: dict = field(default_factory=dict)
     #: node-unit ElasticSpec (min_devices/max_devices count broker *nodes*)
     elastic: "ElasticSpec | None" = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "transport_options",
+                           _freeze_options(self.transport_options))
 
 
 @dataclass(frozen=True)
@@ -136,6 +147,11 @@ class StageSpec:
     #: full-stream checkpoints so a crashed stage pilot is reprovisioned by
     #: the StageReconciler and resumes mid-stream (docs/faults.md); 0 = off
     checkpoint_every: int = 0
+    #: stage-side transport opt-in: "shm" puts a micro-batch stage's
+    #: consumer in zero-copy mode (frame views, sound because the batch is
+    #: fully processed before commit); None inherits safe copy-out.
+    #: Requires broker.transport == "shm".
+    transport: str | None = None
     #: processor factory kwargs
     options: dict = field(default_factory=dict)
     elastic: ElasticSpec | None = None

@@ -1,0 +1,42 @@
+"""Zero-copy shared-memory data plane (docs/transport.md).
+
+The broker stays the control plane (offsets, replication metadata,
+retention); record *payloads* move through a ``multiprocessing.
+shared_memory`` ring of fixed-size slots, written once as columnar batch
+frames and read by same-host consumers as ``numpy.frombuffer`` views —
+no per-message serde on the hot path. Backpressure is the slot
+allocator's stall, surfaced through the same saturation signal the
+broker token buckets feed (``BrokerCluster.io_stall_seconds``), so
+broker elasticity keeps working unchanged.
+"""
+from repro.transport.frames import (
+    FrameBatch,
+    ShmArrayView,
+    decode_frame,
+    encode_frame,
+    pack_frame,
+    unpack_frame,
+)
+from repro.transport.plane import ShmTransport, decode_slot_record, encode_slot_record
+from repro.transport.ring import (
+    RingTimeout,
+    SharedMemoryRing,
+    SlotReclaimedError,
+    get_ring,
+)
+
+__all__ = [
+    "FrameBatch",
+    "RingTimeout",
+    "SharedMemoryRing",
+    "ShmArrayView",
+    "ShmTransport",
+    "SlotReclaimedError",
+    "decode_frame",
+    "decode_slot_record",
+    "encode_frame",
+    "encode_slot_record",
+    "get_ring",
+    "pack_frame",
+    "unpack_frame",
+]

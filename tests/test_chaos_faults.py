@@ -44,6 +44,39 @@ class _DeterministicSource(StreamSource):
         return BASE_TS + i * DT
 
 
+class _BatchedDeterministicSource(_DeterministicSource):
+    """Identical messages and event times, but sent through
+    ``Producer.send_batch`` in fixed-size frames so a shm-transport run
+    carries the whole stream over the ring — results must stay
+    bit-identical to the per-message log baseline."""
+
+    BATCH = 10
+
+    def _produce(self, worker):
+        from repro.broker.producer import Producer
+
+        cfg = self.config
+        rng = np.random.default_rng(cfg.seed + worker)
+        rate = cfg.rate_msgs_per_s / cfg.n_producers if cfg.rate_msgs_per_s else None
+        prod = Producer(self.cluster, cfg.topic, serializer=self.serializer,
+                        rate_msgs_per_s=rate)
+        self.producers.append(prod)
+        quota = None if cfg.total_messages is None else (
+            cfg.total_messages // cfg.n_producers)
+        key = str(worker).encode() if cfg.keyed else None
+        i = 0
+        while not self._stop.is_set() and (quota is None or i < quota):
+            if self.config.rate_msgs_per_s == 0:  # paused, not unthrottled
+                self._stop.wait(0.01)
+                continue
+            n = self.BATCH if quota is None else min(self.BATCH, quota - i)
+            prod.send_batch(
+                [self.make_message(rng, i + j) for j in range(n)],
+                key=key,
+                timestamps=[self.make_timestamp(rng, i + j) for j in range(n)])
+            i += n
+
+
 def _window_fn(key, w, msgs):
     vals = np.array([m.value[1] for m in msgs], dtype=np.float64)
     # np.sum order-sensitivity is the point: any loss, duplication, or
@@ -52,7 +85,8 @@ def _window_fn(key, w, msgs):
 
 
 def _run(schedule=None, *, seed=0, broker_nodes=1, replication_factor=1,
-         executor="inline", checkpoint_every=0, reconcile=False):
+         executor="inline", checkpoint_every=0, reconcile=False,
+         transport=None):
     """One full stream run under an optional fault schedule; returns
     (results, info) where info carries the observability counters the
     matrix asserts on."""
@@ -67,6 +101,14 @@ def _run(schedule=None, *, seed=0, broker_nodes=1, replication_factor=1,
         cluster = kafka.get_context()
         cluster.metrics = bus
         cluster.create_topic("chaos", 1, replication_factor=replication_factor)
+        ring_name = None
+        if transport == "shm":
+            from repro.transport import ShmTransport
+
+            shm = ShmTransport(slot_bytes=1 << 16, n_slots=64)
+            cluster.attach_transport(shm)
+            shm.mount("chaos")
+            ring_name = shm.ring_for("chaos").name
         flink = svc.submit_pilot(flink_pcd)
         stream = flink.get_context().stream(
             cluster, "chaos", group="g",
@@ -83,7 +125,9 @@ def _run(schedule=None, *, seed=0, broker_nodes=1, replication_factor=1,
         if reconcile:
             reconciler = StageReconciler(svc, bus=bus)
             reconciler.manage("chaos", flink, stream, flink_pcd)
-        source = _DeterministicSource(cluster, SourceConfig(
+        src_cls = (_BatchedDeterministicSource if transport == "shm"
+                   else _DeterministicSource)
+        source = src_cls(cluster, SourceConfig(
             "chaos", total_messages=N_MSGS, n_producers=1, keyed=True, seed=7))
         scenario = RateStepScenario(
             source, [(0.4, 1000.0), (0.4, 4000.0), (0.4, 1800.0)], loop=True)
@@ -119,6 +163,7 @@ def _run(schedule=None, *, seed=0, broker_nodes=1, replication_factor=1,
             "stage_recoveries": reconciler.recoveries if reconciler else 0,
             "events": list(injector.events) if injector else [],
             "bus": bus,
+            "ring_name": ring_name,
         }
     finally:
         svc.cancel()
@@ -187,6 +232,27 @@ def test_slow_consumer_degrades_without_drift(baseline, seed, at_records, delay)
     assert info["poll_delay"] == 0.0  # expiry actually reverted the knob
     assert info["late"] == 0 and info["fired"] == EXPECTED_WINDOWS
     _assert_bit_identical(baseline, results, f"slow consumer seed={seed}")
+
+
+@pytest.mark.slow
+def test_kill_pilot_shm_transport_recovers_and_cleans_ring(baseline):
+    """Pilot crash while the stream rides the shared-memory ring: the
+    replay floor (pinned at each checkpoint) must have held every slot the
+    recovery replays — outputs stay bit-identical to the per-message log
+    baseline with zero lost records — and pilot cancel must unlink the
+    ring segment (no shm leak after crash + recover)."""
+    sched = FaultSchedule().kill_pilot(at_records=600)
+    results, info = _run(sched, seed=9, checkpoint_every=100, reconcile=True,
+                         transport="shm")
+    assert info["recoveries"] >= 1, info["events"]
+    assert info["stage_recoveries"] >= 1
+    assert info["lost"] == 0, "shm transport lost acked records"
+    assert info["late"] == 0 and info["fired"] == EXPECTED_WINDOWS
+    _assert_bit_identical(baseline, results, "shm pilot kill")
+    from multiprocessing import shared_memory
+
+    with pytest.raises(FileNotFoundError):
+        shared_memory.SharedMemory(info["ring_name"])
 
 
 @pytest.mark.slow

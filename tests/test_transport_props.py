@@ -1,0 +1,107 @@
+"""Property tests for the columnar frame codec (repro.transport.frames).
+
+Separate module from test_transport.py so the module-level importorskip
+(hypothesis is a dev-only dependency) never hides the always-run transport
+tests — same convention as test_state.py.
+
+The codec's contract: ``decode_frame(pack_frame(values, ts, key))``
+returns the same values (dtype, shape, content), timestamps and key for
+*any* batch — mixed dtypes and shapes, structured records, Fortran-ordered
+and sliced (non-contiguous) inputs, zero-length arrays, raw bytes —
+regardless of how the batch interleaves its column groups.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.transport import decode_frame, pack_frame
+
+SIMPLE_DTYPES = st.sampled_from(
+    ["<u1", "<u2", "<i4", "<i8", "<f4", "<f8", "<c8", "?"])
+
+STRUCTURED_DTYPES = st.sampled_from([
+    np.dtype([("id", "<u4"), ("x", "<f8")]),
+    np.dtype([("id", "<u4"), ("pos", "<f8", (3,)), ("flag", "?")]),
+    np.dtype([("a", "<i2"), ("b", [("c", "<f4"), ("d", "<u1")])]),
+])
+
+SHAPES = st.sampled_from([(0,), (1,), (7,), (3, 4), (2, 3, 2), (16, 16)])
+
+
+@st.composite
+def arrays(draw):
+    if draw(st.booleans()):
+        dt = np.dtype(draw(SIMPLE_DTYPES))
+        shape = draw(SHAPES)
+        n = int(np.prod(shape))
+        raw = draw(st.binary(min_size=n * dt.itemsize, max_size=n * dt.itemsize))
+        arr = np.frombuffer(raw, dtype=dt).reshape(shape).copy()
+    else:
+        dt = draw(STRUCTURED_DTYPES)
+        n = draw(st.integers(min_value=0, max_value=8))
+        arr = np.zeros(n, dtype=dt)
+        if n and dt.names:
+            first = dt.names[0]
+            arr[first] = np.arange(n).astype(arr[first].dtype)
+    # exercise non-contiguous and Fortran-ordered inputs: the encoder must
+    # normalize layout without changing content
+    variant = draw(st.integers(min_value=0, max_value=2))
+    if variant == 1 and arr.ndim >= 2:
+        arr = np.asfortranarray(arr)
+    elif variant == 2 and arr.ndim >= 1 and arr.shape[0] >= 2:
+        arr = arr[::2]
+    return arr
+
+
+def values_strategy():
+    return st.lists(
+        st.one_of(arrays(), st.binary(max_size=64)), min_size=0, max_size=12)
+
+
+@settings(max_examples=200, deadline=None)
+@given(values=values_strategy(), with_ts=st.booleans(),
+       key=st.one_of(st.none(), st.binary(min_size=1, max_size=16)))
+def test_frame_roundtrip_is_lossless(values, with_ts, key):
+    ts = [float(i) * 0.5 for i in range(len(values))] if with_ts else None
+    frame = decode_frame(pack_frame(values, ts, key=key))
+    assert len(frame) == len(values)
+    assert frame.timestamps == ts
+    assert frame.key == key
+    assert len(frame.values) == len(values)
+    for got, want in zip(frame.values, values):
+        if isinstance(want, bytes):
+            assert got == want
+        else:
+            assert got.dtype == want.dtype
+            assert got.shape == want.shape
+            # byte-exact: random float payloads contain NaNs, which
+            # np.array_equal treats as unequal
+            assert np.ascontiguousarray(got).tobytes() == \
+                np.ascontiguousarray(want).tobytes()
+
+
+@settings(max_examples=100, deadline=None)
+@given(values=st.lists(arrays(), min_size=1, max_size=8))
+def test_zero_copy_decode_matches_copy_out(values):
+    buf = pack_frame(values)
+    zc = decode_frame(bytearray(buf), zero_copy=True)
+    co = decode_frame(buf)
+    for a, b in zip(zc.values, co.values):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.ascontiguousarray(a).tobytes() == \
+            np.ascontiguousarray(b).tobytes()
+
+
+@settings(max_examples=100, deadline=None)
+@given(rows=st.integers(min_value=0, max_value=16),
+       dt=STRUCTURED_DTYPES)
+def test_structured_dtype_fields_survive_the_wire(rows, dt):
+    arr = np.zeros(rows, dtype=dt)
+    frame = decode_frame(pack_frame([arr, arr]))
+    for got in frame.values:
+        # dtype equality is field-exact: names, nested formats, subshapes
+        assert got.dtype == dt
+        assert np.array_equal(got, arr)
