@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels.kmeans import assign_ref
 from repro.kernels.tomo import gridrec, mlem, project_ref, shepp_logan
+from repro.models.attention import decode_attention
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -39,4 +40,17 @@ def run() -> list[tuple[str, float, str]]:
     m = jax.jit(lambda s: mlem(s, angles, n, iters=4))
     dt = _time(m, sino)
     rows.append(("kernel_mlem_64_it4", dt * 1e6, f"frames_per_s={1/dt:.2f}"))
+
+    # serving decode: one-token GQA attention at a continuous-batching shape
+    # (16 live sequences, ragged positions against a 256-token KV window)
+    B, S, H, KV, hd = 16, 256, 9, 3, 64
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    pos = jnp.arange(B, dtype=jnp.int32) * (S // B) + S // B - 1
+    d = jax.jit(lambda q, k, v, p: decode_attention(q, k, v, positions=p))
+    dt = _time(d, q, kc, vc, pos)
+    rows.append(("kernel_serving_decode_b16_s256", dt * 1e6,
+                 f"tokens_per_s={B/dt:.3e}"))
     return rows

@@ -1,0 +1,387 @@
+"""Serving benchmark: lockstep vs continuous batching on a heavy-tail trace.
+
+Both modes replay the SAME seeded heavy-tail request trace
+(``repro.serving.trace``) against the same model and params, on a **virtual
+clock**: the driver advances time by the *measured* device seconds of each
+step and stamps arrival/first-token/finish events on that clock — no
+sleeping, so a 30-second workload benchmarks in device time only and the
+numbers are deterministic up to device timing noise.
+
+* **lockstep** — the ``LMServeApp`` baseline shape: requests form
+  fixed-size batches in arrival order; a batch prefills together (rows
+  padded to the longest prompt's bucket) and decodes to the LONGEST output
+  budget in the group; every response is delivered when the whole batch
+  finishes. The p99 prompt/output holds everyone hostage — that is the
+  pathology under test.
+* **continuous** — ``repro.serving.ContinuousBatcher``: prompts prefill
+  into paged KV-cache slots as they arrive and join the live decode batch
+  mid-stream; finished sequences exit per step and free their pages.
+
+Reported per mode: tokens/s (requested tokens over the virtual makespan),
+TTFT p50/p99, per-token decode latency, responses delivered, lost requests
+(must be 0), admission counters and page-pool utilization (continuous).
+A chaos section kills the continuous serving pilot mid-trace and verifies
+recovery reproduces the fault-free responses bit-identically — no
+duplicates, no losses (docs/serving.md).
+
+    PYTHONPATH=src python -m benchmarks.serving [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "BENCH_serving.json")
+
+
+def _build(quick: bool):
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.models import build_model
+    from repro.serving import TraceConfig, heavy_tail_trace
+
+    cfg = get_arch("smollm-135m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    # Overloaded regime with a heavy output tail: arrivals come in faster
+    # than either mode can serve, so the makespan is device-bound and the
+    # lockstep convoy (every group decodes to its LONGEST output budget)
+    # costs real device seconds instead of hiding in arrival gaps.
+    tc = TraceConfig(
+        n_requests=32 if quick else 64,
+        seed=0,
+        rate=1024.0,
+        prompt_median=12 if quick else 16,
+        prompt_sigma=0.8,
+        out_median=3,
+        out_sigma=1.8,
+        max_prompt=32 if quick else 64,
+        max_output=24 if quick else 64,
+        vocab=cfg.vocab_size,
+    )
+    return model, params, heavy_tail_trace(tc)
+
+
+def _quantiles(xs) -> dict:
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {
+        "p50": float(np.percentile(a, 50)),
+        "p99": float(np.percentile(a, 99)),
+        "mean": float(a.mean()),
+    }
+
+
+def _report(trace, results: dict, makespan: float) -> dict:
+    """Mode-agnostic scorecard from {rid: {tokens, arrival, first_token,
+    finish}} responses stamped on the virtual clock."""
+    ttft, per_token = [], []
+    delivered_tokens = 0
+    for r in trace:
+        res = results.get(r.rid)
+        if res is None:
+            continue
+        n = len(res["tokens"])
+        delivered_tokens += n
+        ttft.append(res["first_token"] - r.arrival)
+        if n > 1:
+            per_token.append((res["finish"] - res["first_token"]) / (n - 1))
+    return {
+        "responses": len([r for r in trace if r.rid in results]),
+        "lost_requests": len([r for r in trace if r.rid not in results]),
+        "delivered_tokens": delivered_tokens,
+        "makespan_s": makespan,
+        "tokens_per_sec": delivered_tokens / makespan if makespan > 0 else 0.0,
+        "ttft_s": _quantiles(ttft),
+        "per_token_latency_s": _quantiles(per_token),
+    }
+
+
+# ---------------------------------------------------------------------------
+# lockstep baseline (virtual clock)
+# ---------------------------------------------------------------------------
+
+
+def run_lockstep(model, params, trace, *, batch: int = 8, warm: bool = True) -> dict:
+    """Fixed batches in arrival order; stacked prefill + fused scan decode to
+    the group's longest budget; all responses land when the batch does."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.streaming.dispatch import ShapeBuckets, compile_count
+
+    buckets = ShapeBuckets(min_size=8, max_size=64)
+
+    @jax.jit
+    def prefill(params, toks, last):
+        # ragged rows: gather each row's logit at its own last real token
+        # (same last_pos path the paged prefill uses)
+        logits, cache = model.prefill(params, {"tokens": toks, "last_pos": last})
+        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
+
+    def make_generate(steps):
+        def generate(params, cache, tok, pos):
+            # grow the cache for the decode span inside the jit (the
+            # satellite fix from LMServeApp: no host-side full-cache copy)
+            cache = jax.tree.map(
+                lambda c: jnp.pad(
+                    c, [(0, 0)] * 2 + [(0, steps + 1)] + [(0, 0)] * (c.ndim - 3))
+                if c.ndim >= 4 else c, cache)
+
+            def step(carry, _):
+                tok, pos, cache = carry
+                pos = pos + 1
+                logits, cache = model.decode(
+                    params, cache, {"tokens": tok, "positions": pos})
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                return (tok, pos, cache), tok
+
+            (_, _, _), toks = jax.lax.scan(step, (tok, pos, cache), None, length=steps)
+            return toks
+
+        return jax.jit(generate)
+
+    gens: dict[int, object] = {}
+
+    def serve_group(group):
+        """One stacked batch; returns (device seconds, {rid: tokens tuple})."""
+        plen = buckets.fit(max(r.prompt_len for r in group))
+        gen = max(r.out_tokens for r in group)  # everyone decodes to the max
+        toks = np.zeros((len(group), plen), np.int32)
+        last = np.array([r.prompt_len - 1 for r in group], np.int32)
+        for i, r in enumerate(group):
+            toks[i, : r.prompt_len] = r.prompt
+        t0 = time.monotonic()
+        tok0, cache = prefill(params, jnp.asarray(toks), jnp.asarray(last))
+        if gen > 1:
+            rest = gens.setdefault(gen - 1, make_generate(gen - 1))
+            out = np.asarray(rest(params, cache, tok0, jnp.asarray(last)))
+        jax.block_until_ready(tok0)
+        dt = time.monotonic() - t0
+        tok = np.asarray(tok0)
+        seqs = {}
+        for i, r in enumerate(group):
+            seq = [int(tok[i, 0])]
+            if gen > 1:
+                seq += [int(t) for t in out[:, i, 0]]
+            seqs[r.rid] = tuple(seq[: r.out_tokens])
+        return dt, seqs
+
+    def replay():
+        results = {}
+        now = 0.0
+        for i in range(0, len(trace), batch):
+            group = trace[i: i + batch]
+            start = max(now, max(r.arrival for r in group))
+            dt, seqs = serve_group(group)
+            finish = start + dt
+            for r in group:
+                results[r.rid] = {
+                    "tokens": seqs[r.rid], "arrival": r.arrival,
+                    # lockstep delivers the whole batch at once: first token
+                    # and finish coincide at the batch boundary
+                    "first_token": finish, "finish": finish,
+                }
+            now = finish
+        return results, now
+
+    if warm:
+        replay()  # compile coverage; virtual clock must not bill compiles
+    results, makespan = replay()
+    rep = _report(trace, results, makespan)
+    rep["batch"] = batch
+    rep["compiles"] = {"prefill": compile_count(prefill),
+                       "decode": sum(compile_count(g) for g in gens.values())}
+    return rep, results
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (virtual clock)
+# ---------------------------------------------------------------------------
+
+
+def _drive_continuous(b, trace):
+    """Replay arrivals on the virtual clock: every arrival that is due by
+    ``now`` is submitted before the next scheduler step (so a burst joins as
+    ONE stacked prefill), and the clock advances by each step's measured
+    device time."""
+    util = []
+    now = 0.0
+    i = 0
+    while i < len(trace) or not b.idle:
+        while i < len(trace) and trace[i].arrival <= now:
+            b.submit(trace[i], now)
+            i += 1
+        if b.idle and i < len(trace):
+            now = max(now, trace[i].arrival)  # fast-forward to next arrival
+            continue
+        dt = b.step(now)
+        util.append(b.cache.utilization)
+        now += dt if dt > 0 else 1e-6
+    return now, util
+
+
+def run_continuous(model, params, trace, *, n_pages: int = 128,
+                   page_size: int = 8, use_kernel: bool = False,
+                   max_live: int = 32, decode_quantum: int = 1,
+                   warm: bool = True) -> dict:
+    from repro.serving import ContinuousBatcher
+
+    b = ContinuousBatcher(model, n_pages=n_pages, page_size=page_size,
+                          use_kernel=use_kernel, max_live=max_live,
+                          decode_quantum=decode_quantum,
+                          max_queue=max(64, len(trace)))
+    b.params = params
+    warmed = 0
+    if warm:
+        # Bucket-sweep warmup THEN a full replay: which (rows, table-width)
+        # buckets the scheduler visits depends on measured step times, so a
+        # replay alone can leave shapes uncompiled and leak a ~0.5 s XLA
+        # compile into the timed pass.
+        warmed = b.warmup(
+            max_prompt=max(r.prompt_len for r in trace),
+            max_tokens=max(max(b.prompt_buckets.fit(r.prompt_len),
+                               r.total_tokens) for r in trace),
+            max_live=max_live)
+        _drive_continuous(b, trace)
+        b.reset()
+    compiles_before = b.prefill_compiles + b.decode_compiles
+    makespan, util = _drive_continuous(b, trace)
+    leaked = b.prefill_compiles + b.decode_compiles - compiles_before
+    assert not (warm and leaked), f"{leaked} compiles leaked into the timed pass"
+    rep = _report(trace, b.results, makespan)
+    rep["admission"] = b.admission.stats.as_dict()
+    rep["page_utilization"] = {"mean": float(np.mean(util)) if util else 0.0,
+                               "max": float(np.max(util)) if util else 0.0}
+    rep["compiles"] = {"prefill": b.prefill_compiles, "decode": b.decode_compiles,
+                       "warmup": warmed, "during_timed": leaked}
+    rep["pages"] = {"n_pages": n_pages, "page_size": page_size}
+    rep["decode_quantum"] = decode_quantum
+    return rep, dict(b.results)
+
+
+def run_chaos(model, params, trace, fault_free: dict, *, n_pages: int = 128,
+              page_size: int = 8, decode_quantum: int = 1) -> dict:
+    """Kill the serving pilot mid-trace, recover, and diff the response set
+    against the fault-free run."""
+    from repro.serving import ContinuousBatcher
+
+    b = ContinuousBatcher(model, n_pages=n_pages, page_size=page_size,
+                          decode_quantum=decode_quantum,
+                          max_queue=max(64, len(trace)))
+    b.params = params
+    crash_at = len(trace) // 2
+    now = 0.0
+    for i, r in enumerate(trace):
+        now = max(now, r.arrival)
+        b.submit(r, now)
+        now += b.step(now)
+        if i == crash_at:
+            b.crash()
+            b.recover()
+    b.drain(now)
+    identical = sum(
+        1 for rid in fault_free
+        if rid in b.results and b.results[rid]["tokens"] == fault_free[rid]["tokens"])
+    return {
+        "crash_at_request": crash_at,
+        "responses": len(b.results),
+        "lost": len(set(fault_free) - set(b.results)),
+        "duplicated": 0,  # delivery asserts on duplicate rids; reaching here means none
+        "bit_identical_responses": identical,
+        "recovered_ok": identical == len(fault_free) == len(b.results),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_all(quick: bool, out_path: str = DEFAULT_OUT) -> dict:
+    import jax
+
+    from repro.serving import trace_summary
+
+    model, params, trace = _build(quick)
+    # prompt buckets span [page_size, 4*page_size]: the full trace's
+    # 64-token prompts need 16-token pages
+    page_size = 8 if quick else 16
+    lockstep, _ = run_lockstep(model, params, trace, batch=8)
+    continuous, cont_results = run_continuous(
+        model, params, trace, page_size=page_size,
+        max_live=16 if quick else 32)
+    chaos = run_chaos(model, params, trace, cont_results, page_size=page_size)
+
+    speedup_tps = continuous["tokens_per_sec"] / max(lockstep["tokens_per_sec"], 1e-9)
+    speedup_p99 = lockstep["ttft_s"]["p99"] / max(continuous["ttft_s"]["p99"], 1e-9)
+    report = {
+        "meta": {
+            "quick": quick,
+            "backend": jax.default_backend(),
+            "unix_time": time.time(),
+        },
+        "trace": trace_summary(trace),
+        "lockstep": lockstep,
+        "continuous": continuous,
+        "chaos": chaos,
+        "speedup": {
+            "tokens_per_sec": speedup_tps,
+            "ttft_p99": speedup_p99,
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def _rows(report: dict) -> list[tuple[str, float, str]]:
+    rows = []
+    for mode in ("lockstep", "continuous"):
+        r = report[mode]
+        rows.append((
+            f"serving_{mode}",
+            r["ttft_s"]["p99"] * 1e6,
+            f"tokens_per_s={r['tokens_per_sec']:.1f}"
+            f";ttft_p50_s={r['ttft_s']['p50']:.4f}"
+            f";lost={r['lost_requests']}",
+        ))
+    s = report["speedup"]
+    rows.append((
+        "serving_speedup",
+        0.0,
+        f"tokens_per_sec={s['tokens_per_sec']:.2f}x"
+        f";ttft_p99={s['ttft_p99']:.2f}x"
+        f";chaos_ok={report['chaos']['recovered_ok']}",
+    ))
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    """benchmarks.run entry point: quick mode, JSON emitted as side effect."""
+    return _rows(bench_all(quick=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small trace (CI smoke)")
+    ap.add_argument("--out", default=DEFAULT_OUT, help="JSON report path")
+    args = ap.parse_args()
+    report = bench_all(args.quick, args.out)
+    for name, us, derived in _rows(report):
+        print(f"{name},{us:.1f},{derived}")
+    lk, ct, sp = report["lockstep"], report["continuous"], report["speedup"]
+    print(f"  tokens/s: {lk['tokens_per_sec']:.1f} -> {ct['tokens_per_sec']:.1f} "
+          f"({sp['tokens_per_sec']:.2f}x)")
+    print(f"  ttft p99: {lk['ttft_s']['p99']*1e3:.2f}ms -> {ct['ttft_s']['p99']*1e3:.2f}ms "
+          f"({sp['ttft_p99']:.2f}x)")
+    print(f"  chaos: {report['chaos']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ from repro.elastic.policy import (
     PIDScalingPolicy,
     ScalingDecision,
     ScalingPolicy,
+    SLOPolicy,
     ThresholdHysteresisPolicy,
     first_fit_decreasing,
 )
@@ -41,6 +42,7 @@ __all__ = [
     "MetricsSnapshot",
     "PIDScalingPolicy",
     "Sample",
+    "SLOPolicy",
     "ScalingDecision",
     "ScalingEvent",
     "ScalingPolicy",

@@ -197,6 +197,68 @@ class LatencyPolicy(ScalingPolicy):
 
 
 @dataclass
+class SLOPolicy(ScalingPolicy):
+    """Hold an *absolute* latency SLO instead of a fraction of the batch
+    interval (ROADMAP item 3: the serving tail-latency loop).
+
+    :class:`LatencyPolicy` asks "is the pipeline about to fall behind?";
+    this policy asks "is the p99 the user sees above the contract?" — the
+    right question for serving, where admission control keeps lag near zero
+    by shedding load and the SLO is the only signal that the engine is
+    degrading (1909.06055: drive scaling from the latency model, not
+    incurred lag). Scale up when ``latency_p99`` (the ``stream.latency_p99``
+    gauge, fed by the serving engine) sits above ``slo_p99``; scale down
+    only when the p99 — not the median: a tail breach with a healthy median
+    is exactly the case serving must react to — is far below the SLO
+    (``down_margin``) and lag is drained. Consecutive-observation hysteresis
+    on both legs, as everywhere else in this module.
+    """
+
+    slo_p99: float  # seconds: the contract
+    up_margin: float = 1.0  # scale up when p99 >= up_margin * slo
+    down_margin: float = 0.4  # scale down when p99 <= down_margin * slo
+    max_lag_for_down: float = 10.0
+    up_stable: int = 2
+    down_stable: int = 4
+    step: int = 1
+
+    _above: int = field(default=0, repr=False)
+    _below: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.slo_p99 <= 0:
+            raise ValueError("slo_p99 must be positive")
+        if not 0 < self.down_margin < self.up_margin:
+            raise ValueError("need 0 < down_margin < up_margin")
+
+    def decide(self, snap: MetricsSnapshot) -> ScalingDecision:
+        p99 = snap.latency_p99
+        if p99 >= self.up_margin * self.slo_p99:
+            self._above += 1
+            self._below = 0
+        elif 0.0 < p99 <= self.down_margin * self.slo_p99 and snap.lag <= self.max_lag_for_down:
+            self._below += 1
+            self._above = 0
+        else:
+            self._above = self._below = 0
+        if self._above >= self.up_stable:
+            self._above = 0
+            return ScalingDecision(
+                self.step,
+                f"p99 {p99 * 1e3:.0f}ms breaches SLO {self.slo_p99 * 1e3:.0f}ms "
+                f"for {self.up_stable} observations",
+            )
+        if self._below >= self.down_stable:
+            self._below = 0
+            return ScalingDecision(
+                -self.step,
+                f"p99 {p99 * 1e3:.0f}ms <= {self.down_margin:.0%} of SLO, "
+                f"lag {snap.lag:.0f}",
+            )
+        return HOLD
+
+
+@dataclass
 class BrokerSaturationPolicy(ScalingPolicy):
     """Broker-node elasticity from the producer-side token-bucket signal.
 

@@ -30,6 +30,7 @@ from repro.core.plugin import Lease, ManagerPlugin, register_plugin
 from repro.elastic.metrics import ContinuousStats, MetricsBus
 from repro.state import DEFAULT_PARTITIONS, MigrationReport, PartitionedStateStore, StateMigrator
 from repro.state.store import StatePartition, deserialize_partition, serialize_partition
+from repro.streaming.dispatch import AsyncWindow
 from repro.streaming.windows import SessionWindow, WatermarkTracker
 from repro.workers.proto import OP_APPEND, OP_LATE, OP_MERGE, OP_OBSERVE, SNAPSHOT
 from repro.workers.runtime import WorkerRuntime
@@ -77,6 +78,7 @@ class ContinuousStream:
         worker_options: dict | None = None,
         checkpoint_every: int = 0,
         transport: str | None = None,
+        async_emit: int = 0,
     ):
         if executor not in EXECUTORS:
             raise ValueError(
@@ -131,6 +133,14 @@ class ContinuousStream:
         # checkpoint: the replay re-fires them, the emit is suppressed, and
         # fired_windows is not re-counted — zero lost, zero duplicated
         self._skip_emits = 0
+        #: emit double-buffer depth: > 0 holds up to that many fired-window
+        #: outputs in flight (jax dispatch pending) and delivers them once
+        #: the device catches up, so downstream routing overlaps compute.
+        #: ``fired_windows`` counts *deliveries*, which keeps the
+        #: exactly-once replay arithmetic intact — a crash discards the
+        #: buffer and the replay re-fires its windows. 0 = synchronous.
+        self.async_emit = max(int(async_emit), 0)
+        self._emit_window = AsyncWindow(self.async_emit) if self.async_emit else None
         # quiesce lock: the record loop holds it around ingest+fire, and
         # rescale() takes it to snapshot/migrate — an in-flight process()
         # call can never race a partition hand-off (regression-tested)
@@ -163,7 +173,7 @@ class ContinuousStream:
         self.stats.records += 1
         self.stats.per_record_latency.append(time.time() - ts)
 
-    def _emit_fired(self, out: Any) -> None:
+    def _deliver(self, out: Any) -> None:
         """Deliver one fired window's output — unless it is part of the
         replay prefix a recovery re-fires (already emitted pre-crash)."""
         if self._skip_emits > 0:
@@ -171,6 +181,30 @@ class ContinuousStream:
             return
         self.emit(out)
         self.stats.fired_windows += 1
+
+    def _emit_fired(self, out: Any) -> None:
+        """Route one fired output: straight downstream (synchronous mode)
+        or through the emit double-buffer, delivering whatever the buffer
+        retires to stay within its depth."""
+        if self._emit_window is None:
+            self._deliver(out)
+            return
+        for done, _meta, _dt in self._emit_window.push(out):
+            self._deliver(done)
+
+    def _drain_emits(self) -> None:
+        """Land and deliver every buffered emit (checkpoint/rescale/stop
+        barrier — and the idle-poll flush, so latent outputs never sit in
+        the buffer while the stream is starved). Caller holds the state
+        lock or owns a quiesced stream."""
+        if self._emit_window is None:
+            return
+        done = self._emit_window.sync()
+        for out, _meta, _dt in done:
+            self._deliver(out)
+        if done:
+            with self._fired:
+                self._fired.notify_all()
 
     def _fire_ready(self) -> None:
         wm = self.watermarks.watermark
@@ -244,6 +278,10 @@ class ContinuousStream:
                         for m in msgs:
                             self._ingest(m)
                         self._fire_ready()
+                    if not msgs:
+                        # quiet round: no new firings are coming, so land
+                        # anything the emit double-buffer still holds
+                        self._drain_emits()
                     if msgs and self.checkpoint_every:
                         self._since_ckpt += len(msgs)
                         if self._since_ckpt >= self.checkpoint_every:
@@ -280,6 +318,9 @@ class ContinuousStream:
         buffered = (self.runtime.buffered_windows if self.runtime is not None
                     else self.store.buffered_windows)
         bus.publish("stream.buffered_windows", buffered, **labels)
+        if self._emit_window is not None:
+            bus.publish("stream.emit_inflight", self._emit_window.in_flight,
+                        **labels)
         bus.publish("stream.lag", sum(
             self.cluster.lag(self.group.group, self.topic).values()), **labels)
         if self.runtime is not None:
@@ -339,6 +380,7 @@ class ContinuousStream:
         # behavior, not a correctness loss
         if self._state_lock.acquire(timeout=5):
             try:
+                self._drain_emits()  # deliver buffered outputs before teardown
                 if self.runtime is not None:
                     self.runtime.shutdown()
                 self.migrator.cleanup()
@@ -360,6 +402,11 @@ class ContinuousStream:
         Caller holds ``_state_lock``; positions reflect the just-processed
         batch, so restoring the spool and seeking to its positions replays
         nothing twice and skips nothing."""
+        # fired-but-undelivered outputs must go downstream before the cut:
+        # their windows were already popped from the store and their records
+        # sit behind the checkpoint positions, so a crash after this spool
+        # would otherwise lose them (they would never re-fire)
+        self._drain_emits()
         if self.runtime is not None:
             payloads: dict[int, bytes] = {}
             for sup in self.runtime._sups:
@@ -397,6 +444,10 @@ class ContinuousStream:
         if self._thread is not None:
             self._thread.join(timeout=5)
             self._thread = None
+        if self._emit_window is not None:
+            # buffered outputs die with the pilot; fired_windows never
+            # counted them, so the replay re-fires and delivers them once
+            self._emit_window.discard()
         if self.runtime is not None:
             for sup in list(self.runtime._sups):
                 sup.kill()
@@ -486,6 +537,7 @@ class ContinuousStream:
                 return None
             if self.sync_fn is not None:
                 self.sync_fn()
+            self._drain_emits()  # no output may straddle the migration
             if self.runtime is not None:
                 # mp: drain in-flight replies, quiesce workers, then move
                 # partitions between processes through the migrator spool

@@ -370,16 +370,27 @@ class LMTrainApp(_HotPathApp):
 class LMServeApp(_HotPathApp):
     """Streaming LM inference: prefill each request batch, decode n tokens.
 
-    The whole micro-batch's requests are stacked into one prefill (rows
-    padded to a bucket) and the per-token decode loop runs as one fused
-    ``lax.scan`` with the KV cache donated between steps.
+    ``mode="lockstep"`` (default): the whole micro-batch's requests are
+    stacked into one prefill (rows padded to a bucket) and the per-token
+    decode loop runs as one fused ``lax.scan`` with the KV cache donated
+    between steps — every row enters and exits together.
+
+    ``mode="continuous"``: requests go through the in-flight batching
+    scheduler (``repro.serving.ContinuousBatcher``) — prompts prefill into
+    paged KV-cache slots and join the live decode batch mid-stream, finished
+    rows exit per step and free their pages immediately. Same greedy tokens
+    (see docs/serving.md for the equivalence argument), radically different
+    tail latency under heavy-tail prompt lengths.
     """
 
     def __init__(self, cfg, *, mesh=None, prompt_len: int = 32, gen_tokens: int = 8,
                  batch: int = 4, async_depth: int = 2, metrics: Any = None,
-                 row_buckets: ShapeBuckets | None = None):
+                 row_buckets: ShapeBuckets | None = None, mode: str = "lockstep",
+                 n_pages: int = 256, page_size: int = 16,
+                 use_kernel: bool = False, interpret: bool | None = None):
         from repro.models import build_model
 
+        assert mode in ("lockstep", "continuous"), mode
         self.cfg = cfg
         self.model = build_model(cfg)
         # single-host serving jits the model directly; a mesh is only needed
@@ -388,11 +399,38 @@ class LMServeApp(_HotPathApp):
         self.prompt_len = prompt_len
         self.gen_tokens = gen_tokens
         self.batch = batch
+        self.mode = mode
         self.row_buckets = row_buckets or ShapeBuckets(min_size=batch, max_size=batch * 8)
         self._init_hotpath(async_depth=async_depth, metrics=metrics, name="lm_serve")
-        self._prefill = jax.jit(self.model.prefill)
+        # cache sized for prompt + generation inside the jitted path: growing
+        # it afterwards (jnp.pad on the host) copied the entire KV cache per
+        # batch (see _prefill_grown)
+        self._prefill = jax.jit(self._prefill_grown)
         # donate the KV cache: each scan step reuses the same buffers
         self._generate = jax.jit(self._generate_impl, donate_argnums=(1,))
+        self._batcher = None
+        if mode == "continuous":
+            from repro.serving import ContinuousBatcher
+
+            self._batcher = ContinuousBatcher(
+                self.model, n_pages=n_pages, page_size=page_size,
+                use_kernel=use_kernel, interpret=interpret,
+                max_queue=max(64, batch * 16), metrics=metrics)
+            self._rid = 0
+            self._now = 0.0
+
+    def _prefill_grown(self, params, batch):
+        """Prefill with the KV cache allocated at prompt_len + gen_tokens —
+        the pad happens inside the jit, so XLA materializes the full-size
+        cache once instead of prefill-size buffers plus a host-side copy."""
+        logits, cache = self.model.prefill(params, batch)
+        cache = jax.tree.map(
+            lambda c: jnp.pad(
+                c, [(0, 0)] * 2 + [(0, self.gen_tokens)] + [(0, 0)] * (c.ndim - 3))
+            if c.ndim >= 4 else c,
+            cache,
+        )
+        return logits, cache
 
     def _generate_impl(self, params, cache, tok, pos):
         def step(carry, _):
@@ -424,12 +462,6 @@ class LMServeApp(_HotPathApp):
         n_req = toks.shape[0]
         tok_in = jnp.asarray(pad_rows(toks, self.row_buckets.fit(n_req)))
         logits, cache = self._prefill(params, {"tokens": tok_in})
-        # grow cache for generated tokens
-        cache = jax.tree.map(
-            lambda c: jnp.pad(c, [(0, 0)] * 2 + [(0, self.gen_tokens)] + [(0, 0)] * (c.ndim - 3))
-            if c.ndim >= 4 else c,
-            cache,
-        )
         pos = jnp.full((tok_in.shape[0],), self.prompt_len - 1, jnp.int32)
         tok0 = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         if self.gen_tokens > 1:
@@ -439,25 +471,61 @@ class LMServeApp(_HotPathApp):
             seq = tok0[None]
         return seq, n_req
 
+    def _serve_continuous(self, params, msgs) -> np.ndarray:
+        """Route a micro-batch through the in-flight scheduler; returns
+        (n_req, gen_tokens) greedy tokens in request order."""
+        from repro.serving.trace import Request
+
+        b = self._batcher
+        b.params = params
+        toks = self._stack_requests(msgs)
+        rids = []
+        for row in toks:
+            r = Request(self._rid, self._now, tuple(int(t) for t in row),
+                        self.gen_tokens)
+            self._rid += 1
+            verdict = b.submit(r, self._now)
+            assert verdict != "reject", "drop-in mode must not shed requests"
+            rids.append(r.rid)
+            self._now += b.step(self._now)
+        self._now = b.drain(self._now)
+        return np.array([b.results[r]["tokens"] for r in rids], np.int32)
+
     def process(self, state, msgs):
         params = state  # serving state = model params
         t0 = time.monotonic()
-        seq, n_req = self._serve_batch(params, msgs)
+        if self.mode == "continuous":
+            out = self._serve_continuous(params, msgs)
+            n_req = out.shape[0]
+        else:
+            out, n_req = self._serve_batch(params, msgs)
         self.stats.messages += len(msgs)
         self.stats.items += n_req * self.gen_tokens
         self.stats.batches += 1
-        self._submit(seq, t0=t0)
+        self._submit(out, t0=t0)
         return params
 
     def generate_tokens(self, params, msgs) -> np.ndarray:
         """Greedy tokens for a message batch: (n_req, gen_tokens) int32.
         Convenience/inspection path; ``process`` is the streaming hot path."""
+        if self.mode == "continuous":
+            return self._serve_continuous(params, msgs)
         seq, n_req = self._serve_batch(params, msgs)
         return np.asarray(seq[:, :n_req, 0]).T
 
     @property
     def compiles(self) -> int:
+        if self.mode == "continuous":
+            return self._batcher.decode_compiles
         return compile_count(self._generate)
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Steady-state contract (satellite of docs/perf.md): one compile per
+        row bucket — the in-jit cache growth must not retrigger per batch."""
+        if self.mode == "continuous":
+            return self._batcher.prefill_compiles
+        return compile_count(self._prefill)
 
 
 PROCESSORS = {

@@ -12,14 +12,19 @@ All functions take Q: (B, Sq, H, hd); K,V: (B, Skv, KV, hd) with H % KV == 0.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import math
+import threading
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+# decode-kernel routing context (see decode_kernel_scope)
+_DECODE_KERNEL = threading.local()
 
 
 def _group(q: jax.Array, n_kv: int) -> jax.Array:
@@ -133,7 +138,17 @@ def decode_attention(
     of valid cache entries per sequence (the new token attends to < pos+1).
     Softmax reductions over the sharded S dim lower to partial max/sum +
     all-reduce under GSPMD — a distributed flash-decode by construction.
+
+    Inside a :func:`decode_kernel_scope` the same computation dispatches to
+    the Pallas decode kernel (kernels/attention/decode_kernel.py) — routing
+    happens at trace time, so a jitted decode step traced under the scope
+    bakes the kernel in.
     """
+    cfg = getattr(_DECODE_KERNEL, "cfg", None)
+    if cfg is not None:
+        from repro.kernels.attention.decode_kernel import decode_attention_pallas
+
+        return decode_attention_pallas(q, k_cache, v_cache, positions, **cfg)
     B, _, H, hd = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
     qg = _group(q, KV)[:, 0].astype(jnp.float32)  # (B,KV,G,hd) after squeeze
@@ -144,6 +159,27 @@ def decode_attention(
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, H, hd).astype(v_cache.dtype)
+
+
+@contextlib.contextmanager
+def decode_kernel_scope(*, block_kv: int = 128, interpret: bool | None = None):
+    """Route :func:`decode_attention` through the Pallas decode kernel.
+
+    Trace-time routing: wrap the *tracing* call (the first invocation of a
+    jitted decode step) — the traced HLO then contains the kernel for the
+    life of that compilation. ``interpret=None`` resolves to interpret mode
+    off-TPU (the correct-but-slow fallback), native on TPU.
+    """
+    if interpret is None:
+        from repro.streaming.dispatch import kernel_interpret
+
+        interpret = kernel_interpret()
+    prev = getattr(_DECODE_KERNEL, "cfg", None)
+    _DECODE_KERNEL.cfg = {"block_kv": int(block_kv), "interpret": bool(interpret)}
+    try:
+        yield
+    finally:
+        _DECODE_KERNEL.cfg = prev
 
 
 def update_cache(

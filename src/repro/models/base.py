@@ -18,6 +18,11 @@ class BaseModel:
     ``decode`` and the shape-struct providers used by the dry-run.
     """
 
+    #: model family supports the paged-KV serving path (runtime/steps.py
+    #: paged builders): prefill honours ``batch["last_pos"]`` and its cache
+    #: is the standard (L, B, S, KV, hd) {"k","v"} tree
+    SUPPORTS_PAGED = False
+
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.compute_dtype = jnp.dtype(cfg.compute_dtype)

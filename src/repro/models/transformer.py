@@ -118,6 +118,8 @@ def attn_block_decode(
 class DecoderLM(BaseModel):
     """Dense / MoE / VLM decoder-only language model."""
 
+    SUPPORTS_PAGED = True
+
     @property
     def is_moe(self) -> bool:
         return bool(self.cfg.n_experts)
@@ -234,9 +236,14 @@ class DecoderLM(BaseModel):
 
     def prefill(self, params: dict, batch: dict) -> tuple[jax.Array, Any]:
         x, _, (k, v) = self._forward(params, batch, collect_cache=True)
-        logits = (
-            x[:, -1:].astype(jnp.float32) @ self._head(params).T.astype(jnp.float32)
-        )
+        last = batch.get("last_pos")
+        if last is None:
+            xs = x[:, -1:]
+        else:
+            # variable-length prompts right-padded to a bucket: the logits
+            # must come from the true last token, not the padding tail
+            xs = x[jnp.arange(x.shape[0]), last][:, None]
+        logits = xs.astype(jnp.float32) @ self._head(params).T.astype(jnp.float32)
         cache = {"k": k, "v": v}  # (L, B, S, KV, hd)
         return logits, cache
 

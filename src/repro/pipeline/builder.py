@@ -36,7 +36,7 @@ _STAGE_FIELDS = {
     "engine", "nodes", "cores_per_node", "group", "output_topic", "emits",
     "batch_interval", "max_batch_records", "backpressure", "window",
     "state_partitions", "executor", "checkpoint_every", "priority", "share",
-    "colocate_with", "transport",
+    "colocate_with", "transport", "async_emit",
 }
 _TRANSPORTS = {"log", "shm"}
 _SOURCE_FIELDS = {
@@ -341,6 +341,23 @@ class Pipeline:
                     "continuous engine (the micro-batch engine checkpoints "
                     "per batch already)"
                 )
+            if s.async_emit < 0:
+                errors.append(
+                    f"stage {s.name!r}: async_emit must be >= 0, "
+                    f"got {s.async_emit}"
+                )
+            elif s.async_emit and s.engine != "continuous":
+                errors.append(
+                    f"stage {s.name!r}: async_emit only applies to the "
+                    "continuous engine (the micro-batch engine double-buffers "
+                    "inside its apps; see docs/perf.md)"
+                )
+            elif s.async_emit and s.executor == "mp":
+                errors.append(
+                    f"stage {s.name!r}: async_emit requires the inline "
+                    "executor (mp workers already overlap host routing with "
+                    "device compute across processes)"
+                )
 
         by_stage_name = {s.name: s for s in self._stages}
         for s in self._stages:
@@ -421,22 +438,23 @@ class Pipeline:
                 errors.append(str(e.args[0]))
                 continue
             params = dict(el.params)
-            if el.policy == "latency" and stage_name in by_name:
+            if el.policy in ("latency", "slo") and stage_name in by_name:
                 # the inline continuous executor never publishes
-                # latency_p50/p99, so a latency policy on it would silently
-                # hold forever; the mp executor publishes per-worker and
-                # aggregate quantiles, so it may use one
+                # latency_p50/p99, so a latency/slo policy on it would
+                # silently hold forever; the mp executor publishes per-worker
+                # and aggregate quantiles, so it may use one
                 target = by_name[stage_name]
                 if target.engine == "continuous" and target.executor != "mp":
                     errors.append(
-                        f"elastic policy 'latency' on {stage_name!r}: the "
+                        f"elastic policy {el.policy!r} on {stage_name!r}: the "
                         "continuous engine's inline executor publishes no "
                         "latency quantiles; use executor='mp' or a "
                         "lag-based policy (threshold/pid/binpack)"
                     )
                     continue
-                # the runner injects the stage's batch interval the same way
-                params.setdefault("batch_interval", by_name[stage_name].batch_interval)
+                if el.policy == "latency":
+                    # the runner injects the stage's batch interval the same way
+                    params.setdefault("batch_interval", by_name[stage_name].batch_interval)
             try:
                 cls(**params)
             except (TypeError, ValueError) as e:

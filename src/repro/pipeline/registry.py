@@ -15,6 +15,7 @@ from repro.elastic.policy import (
     BrokerSaturationPolicy,
     LatencyPolicy,
     PIDScalingPolicy,
+    SLOPolicy,
     ThresholdHysteresisPolicy,
 )
 
@@ -24,6 +25,7 @@ POLICIES: dict[str, type] = {
     "pid": PIDScalingPolicy,
     "binpack": BinPackingPolicy,
     "latency": LatencyPolicy,
+    "slo": SLOPolicy,
     "broker_saturation": BrokerSaturationPolicy,
 }
 
@@ -122,14 +124,20 @@ def known_sinks() -> set[str]:
     return set(_SINKS)
 
 
-def make_processor(name: str, options: dict) -> Any:
+def make_processor(name: str, options: dict, *, metrics: Any = None) -> Any:
     """Instantiate a processor: app factories get ``options`` kwargs; plain
     process/window functions — ``(state, msgs)`` or ``(key, window, msgs)``
-    — are returned as-is."""
-    factory = resolve_processor(name)
-    if not isinstance(factory, type):
-        import inspect
+    — are returned as-is.
 
+    ``metrics`` (the runner's MetricsBus) is injected into factories that
+    accept a ``metrics`` kwarg — this is how app-level gauges (serving page
+    pool, app latency quantiles) reach the elastic loop without every spec
+    having to plumb the bus through ``options``. An explicit
+    ``options["metrics"]`` wins."""
+    factory = resolve_processor(name)
+    import inspect
+
+    if not isinstance(factory, type):
         try:
             sig = inspect.signature(factory)
         except (TypeError, ValueError):
@@ -149,4 +157,12 @@ def make_processor(name: str, options: dict) -> Any:
                         f"options {sorted(options)} have nowhere to go"
                     )
                 return factory
+    if metrics is not None and "metrics" not in options:
+        target = factory.__init__ if isinstance(factory, type) else factory
+        try:
+            params = inspect.signature(target).parameters
+        except (TypeError, ValueError):
+            params = {}
+        if "metrics" in params:
+            options = dict(options, metrics=metrics)
     return factory(**options)

@@ -396,7 +396,8 @@ class PipelineRun:
             if not self._own_service:
                 self._push(f"pilot:{stage.name}", pilot.cancel)
         ctx = pilot.get_context()
-        proc = registry.make_processor(stage.processor, dict(stage.options))
+        proc = registry.make_processor(
+            stage.processor, dict(stage.options), metrics=self.bus)
         self._processors[stage.name] = proc
         # topic alone is ambiguous when two stages consume the same topic,
         # and topic/group alone is ambiguous when two *pipelines* share a
@@ -440,6 +441,7 @@ class PipelineRun:
                 executor=stage.executor,
                 checkpoint_every=stage.checkpoint_every,
                 transport=stage.transport,
+                async_emit=stage.async_emit,
             )
         self._streams[stage.name] = stream
 

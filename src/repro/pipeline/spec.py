@@ -89,7 +89,7 @@ class ElasticSpec:
     """Per-stage elasticity: which policy watches the bus, and the
     controller's clamps. ``policy`` is one of POLICIES in
     :mod:`repro.pipeline.registry` ("threshold", "pid", "binpack",
-    "latency"); ``params`` are the policy's constructor kwargs."""
+    "latency", "slo"); ``params`` are the policy's constructor kwargs."""
 
     policy: str = "threshold"
     params: dict = field(default_factory=dict)
@@ -152,6 +152,10 @@ class StageSpec:
     #: fully processed before commit); None inherits safe copy-out.
     #: Requires broker.transport == "shm".
     transport: str | None = None
+    #: continuous engine only: depth of the emit double-buffer — fired
+    #: windows are produced downstream asynchronously so host-side routing
+    #: overlaps device compute (docs/perf.md); 0 = synchronous emits
+    async_emit: int = 0
     #: processor factory kwargs
     options: dict = field(default_factory=dict)
     elastic: ElasticSpec | None = None

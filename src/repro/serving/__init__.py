@@ -1,0 +1,22 @@
+"""repro.serving — continuous-batching LM inference on a paged KV cache.
+
+ROADMAP item 3: the serving-side answer to heavy-tail request loads. See
+docs/serving.md for the architecture; the public surface is:
+
+* :class:`~repro.serving.pages.PagePool` / :class:`~repro.serving.pages.PagedKVCache`
+* :class:`~repro.serving.admission.AdmissionController`
+* :class:`~repro.serving.batcher.ContinuousBatcher`
+* :func:`~repro.serving.trace.heavy_tail_trace`
+"""
+from repro.serving.admission import ADMIT, QUEUE, REJECT, AdmissionController, TokenBucket
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.pages import PageAllocError, PagedKVCache, PagePool
+from repro.serving.trace import Request, TraceConfig, heavy_tail_trace, trace_summary
+
+__all__ = [
+    "ADMIT", "QUEUE", "REJECT",
+    "AdmissionController", "TokenBucket",
+    "ContinuousBatcher",
+    "PageAllocError", "PagedKVCache", "PagePool",
+    "Request", "TraceConfig", "heavy_tail_trace", "trace_summary",
+]

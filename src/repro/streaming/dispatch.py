@@ -168,6 +168,15 @@ class AsyncWindow:
                 done.append(self._wait_oldest())
         return done
 
+    def discard(self) -> int:
+        """Drop every pending entry without waiting on or delivering it.
+        Crash-injection path: replay re-produces the dropped work, so
+        delivering it here would double-count. Returns the count dropped."""
+        with self._lock:
+            n = len(self._pending)
+            self._pending.clear()
+            return n
+
     @property
     def in_flight(self) -> int:
         return len(self._pending)

@@ -539,3 +539,120 @@ def test_latency_policy_selectable_from_spec_runner():
         assert isinstance(ctl.policy, LatencyPolicy)
         assert ctl.policy.batch_interval == 0.25
         assert ctl.policy.up_frac == 0.9
+
+
+# ---------------------------------------------------------------------------
+# SLOPolicy (absolute-latency contract) + serving wiring
+# ---------------------------------------------------------------------------
+
+
+def test_slo_policy_absolute_threshold_with_hysteresis():
+    from repro.elastic import SLOPolicy
+
+    p = SLOPolicy(slo_p99=0.1, up_stable=2, down_stable=2)
+    assert p.decide(_snap(p99=0.2)).delta_devices == 0  # 1st breach holds
+    d = p.decide(_snap(p99=0.2))
+    assert d.scale_up and d.delta_devices == 1
+    assert p.decide(_snap(p99=0.05)).delta_devices == 0  # mid-band
+    assert p.decide(_snap(p99=0.01)).delta_devices == 0
+    assert p.decide(_snap(p99=0.01)).delta_devices == -1
+    # no latency signal (0.0 = no samples yet) never scales down
+    for _ in range(5):
+        assert p.decide(_snap(p99=0.0)).delta_devices == 0
+    # undrained lag blocks scale-down even under a quiet p99
+    p2 = SLOPolicy(slo_p99=0.1, down_stable=1, max_lag_for_down=10)
+    assert p2.decide(_snap(p99=0.01, lag=500)).delta_devices == 0
+    with pytest.raises(ValueError):
+        SLOPolicy(slo_p99=0.0)
+    with pytest.raises(ValueError):
+        SLOPolicy(slo_p99=0.1, up_margin=0.3, down_margin=0.5)
+
+
+def test_slo_policy_selectable_from_spec_and_rejected_on_inline_continuous():
+    from repro.elastic import SLOPolicy
+    from repro.pipeline.registry import resolve_policy
+
+    assert resolve_policy("slo") is SLOPolicy
+    built = (Pipeline.named("slo1").topic("a")
+             .stage("s", topic="a", processor="count_msgs")
+             .elastic("s", policy="slo", slo_p99=0.25)
+             .build())
+    with built.run(devices=2) as run:
+        ctl = run.controller("s")
+        assert isinstance(ctl.policy, SLOPolicy)
+        assert ctl.policy.slo_p99 == 0.25
+    # inline continuous publishes no latency quantiles -> spec is invalid
+    with pytest.raises(PipelineValidationError, match="no latency quantiles"):
+        (Pipeline.named("slo2").topic("a")
+         .stage("s", topic="a", processor="count_msgs", engine="continuous")
+         .elastic("s", policy="slo", slo_p99=0.25)
+         .build())
+
+
+def test_builder_validates_async_emit():
+    # negative depth
+    with pytest.raises(PipelineValidationError, match=">= 0"):
+        (Pipeline.named("ae1").topic("a")
+         .stage("s", topic="a", processor="count_msgs", engine="continuous",
+                async_emit=-1)
+         .build())
+    # only meaningful on the continuous engine
+    with pytest.raises(PipelineValidationError, match="continuous engine"):
+        (Pipeline.named("ae2").topic("a")
+         .stage("s", topic="a", processor="count_msgs", async_emit=2)
+         .build())
+    # inline executor only (mp workers overlap across processes already)
+    with pytest.raises(PipelineValidationError, match="inline"):
+        (Pipeline.named("ae3").topic("a")
+         .stage("s", topic="a", processor="count_msgs", engine="continuous",
+                executor="mp", async_emit=2)
+         .build())
+    # valid spec round-trips the field
+    spec = (Pipeline.named("ae4").topic("a")
+            .stage("s", topic="a", processor="count_msgs", engine="continuous",
+                   async_emit=2)
+            .build())
+    assert spec.stage("s").async_emit == 2
+    assert PipelineSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_async_emit_reaches_the_continuous_stream():
+    from repro.pipeline import register_processor as _rp
+
+    @_rp("win_len_ae")
+    def win_len_ae(key, window, msgs):
+        return len(msgs)
+
+    spec = (Pipeline.named("aerun")
+            .topic("in", partitions=1)
+            .source("in", kind="vec8", rate_msgs_per_s=200, total_messages=12)
+            .stage("s", topic="in", processor="win_len_ae",
+                   engine="continuous", window={"window": "tumbling", "size": 0.05},
+                   async_emit=3)
+            .build())
+    with spec.run(devices=1) as run:
+        stream = run.stream("s")
+        assert stream.async_emit == 3 and stream._emit_window is not None
+        stream.await_windows(1, timeout=20)
+
+
+def test_runner_injects_metrics_bus_into_factories_that_take_it():
+    from repro.pipeline.registry import make_processor, register_processor as _rp
+    from repro.elastic import MetricsBus
+
+    class _BusAware:
+        def __init__(self, k=1, metrics=None):
+            self.k, self.metrics = k, metrics
+
+        def process(self, state, msgs):
+            return state
+
+    _rp("bus_aware_app", _BusAware)
+    bus = MetricsBus()
+    app = make_processor("bus_aware_app", {"k": 2}, metrics=bus)
+    assert app.metrics is bus and app.k == 2
+    # explicit option wins over injection
+    app = make_processor("bus_aware_app", {"metrics": None}, metrics=bus)
+    assert app.metrics is None
+    # factories without the kwarg are untouched; plain fns stay plain
+    assert make_processor("count_msgs", {}, metrics=bus)

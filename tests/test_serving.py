@@ -1,0 +1,470 @@
+"""repro.serving — continuous batching over the paged KV cache.
+
+The load-bearing claims (docs/serving.md):
+
+* the paged gather/scatter decode produces greedy tokens **bit-identical**
+  to the dense prefill + per-token decode path, for any interleaving of
+  joins and exits;
+* compile count is bounded by the shape buckets, not the trace;
+* admission never deadlocks (lifetime reservation) and never loses or
+  duplicates a request — including across a pilot crash mid-trace;
+* the Pallas decode kernel (interpret mode on CPU) slots into the same
+  scheduler and produces the same tokens;
+* ``LMServeApp(mode="continuous")`` is a drop-in for the lockstep server.
+
+``tests/test_serving_props.py`` holds the hypothesis property suite for the
+page allocator and trace determinism.
+"""
+import time
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.models import build_model
+from repro.serving import (
+    ADMIT,
+    QUEUE,
+    REJECT,
+    AdmissionController,
+    ContinuousBatcher,
+    PageAllocError,
+    PagedKVCache,
+    PagePool,
+    Request,
+    TraceConfig,
+    heavy_tail_trace,
+    trace_summary,
+)
+
+
+@dataclass
+class Msg:
+    value: Any
+    timestamp: float = 0.0
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(model, params) on the reduced config — shared, params never mutated."""
+    cfg = get_arch("smollm-135m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+SMALL_TRACE = dict(n_requests=10, seed=3, rate=64.0, prompt_median=10,
+                   max_prompt=40, out_median=5, out_sigma=0.5, max_output=10)
+
+
+def run_trace(batcher, trace):
+    now = 0.0
+    verdicts = []
+    for r in trace:
+        now = max(now, r.arrival)
+        verdicts.append(batcher.submit(r, now))
+        now += batcher.step(now)
+    batcher.drain(now)
+    return verdicts
+
+
+def dense_greedy(model, params, req):
+    """Reference: dense prefill + per-token decode, greedy."""
+    toks = jnp.asarray(np.array(req.prompt, np.int32)[None])
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": toks})
+    seq = [int(jnp.argmax(logits[:, -1], -1)[0])]
+    cache = jax.tree.map(
+        lambda c: jnp.pad(c, [(0, 0)] * 2 + [(0, req.out_tokens)] + [(0, 0)] * (c.ndim - 3))
+        if c.ndim >= 4 else c, cache)
+    dec = jax.jit(model.decode)
+    pos = req.prompt_len - 1
+    for _ in range(req.out_tokens - 1):
+        pos += 1
+        lg, cache = dec(params, cache, {
+            "tokens": jnp.asarray([[seq[-1]]], jnp.int32),
+            "positions": jnp.asarray([pos], jnp.int32)})
+        seq.append(int(jnp.argmax(lg[:, -1], -1)[0]))
+    return seq
+
+
+# ---------------------------------------------------------------------------
+# page pool (always-run mirror of the property suite)
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_alloc_release_conservation():
+    pool = PagePool(9, 4)
+    assert pool.capacity_pages == 8  # page 0 reserved
+    assert pool.alloc("a", 3) and pool.alloc("b", 5)
+    assert pool.free_pages == 0
+    assert not pool.alloc("c", 1), "over-capacity alloc must fail atomically"
+    assert "c" not in pool.sequences()  # failed alloc leaves no owner behind
+    pool.check_invariants()
+    assert pool.release("a") == 3
+    assert pool.alloc("c", 3)
+    assert pool.release("b") == 5 and pool.release("c") == 3
+    assert pool.free_pages == pool.capacity_pages
+    pool.check_invariants()
+
+
+def test_page_pool_rejects_impossible_request():
+    pool = PagePool(4, 2)
+    with pytest.raises(PageAllocError):
+        pool.alloc("x", 99)
+    pool.check_invariants()
+
+
+def test_page_pool_ensure_grows_to_token_count():
+    pool = PagePool(8, 4)
+    assert pool.ensure("s", 10)  # 3 pages
+    assert pool.capacity_tokens("s") == 12
+    assert pool.ensure("s", 12)  # no-op
+    assert len(pool.owned("s")) == 3
+    assert pool.ensure("s", 13)
+    assert len(pool.owned("s")) == 4
+    pool.check_invariants()
+
+
+def test_paged_cache_table_pads_with_scratch_and_truncates():
+    cache = PagedKVCache(1, 1, 4, n_pages=8, page_size=2)
+    assert cache.admit("a", 6)  # 3 pages
+    t = cache.table(["a"], 4)
+    assert t.shape == (1, 4) and t[0, 3] == 0 and (t[0, :3] > 0).all()
+    with pytest.raises(ValueError):
+        cache.table(["a"], 2)
+    t = cache.table(["a"], 2, truncate=True)
+    assert (t[0] == cache.pool.owned("a")[:2]).all()
+    t = cache.table(["a"], 4, rows=3)
+    assert t.shape == (3, 4) and (t[1:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# admission
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rate_limit_rejects_at_the_door():
+    pool = PagePool(64, 16)
+    adm = AdmissionController(pool, rate=10.0, burst=20.0)
+    assert adm.offer(16, 0.0, queue_depth=0) == ADMIT
+    assert adm.offer(16, 0.0, queue_depth=0) == REJECT  # bucket empty
+    assert adm.offer(16, 2.0, queue_depth=0) == ADMIT  # refilled
+    assert adm.stats.rejected_rate == 1
+
+
+def test_admission_queues_then_rejects_when_full():
+    pool = PagePool(3, 4)  # 2 usable pages = 8 tokens
+    adm = AdmissionController(pool, max_queue=2)
+    assert adm.offer(8, 0.0, queue_depth=0) == ADMIT
+    pool.alloc("a", 2)
+    assert adm.offer(4, 0.0, queue_depth=0) == QUEUE  # no pages left
+    assert adm.offer(4, 0.0, queue_depth=1) == QUEUE
+    assert adm.offer(4, 0.0, queue_depth=2) == REJECT
+    assert adm.stats.as_dict()["rejected_queue_full"] == 1
+
+
+def test_admission_fifo_no_bypass():
+    """A small arrival behind a queued big one must queue, not jump ahead."""
+    pool = PagePool(5, 4)
+    adm = AdmissionController(pool)
+    pool.alloc("live", 3)  # 1 page free
+    assert adm.offer(8, 0.0, queue_depth=0) == QUEUE  # needs 2
+    assert adm.offer(2, 0.0, queue_depth=1) == QUEUE  # would fit, but FIFO
+
+
+def test_admission_headroom_reserve():
+    pool = PagePool(5, 4)
+    adm = AdmissionController(pool, headroom_pages=2)
+    assert adm.can_place(8)  # 2 <= 4 - 2
+    assert not adm.can_place(9)  # 3 > 4 - 2
+
+
+# ---------------------------------------------------------------------------
+# trace generator
+# ---------------------------------------------------------------------------
+
+
+def test_trace_is_seed_deterministic_and_bounded():
+    a = heavy_tail_trace(TraceConfig(seed=7))
+    b = heavy_tail_trace(TraceConfig(seed=7))
+    assert a == b
+    c = heavy_tail_trace(TraceConfig(seed=8))
+    assert a != c
+    cfg = TraceConfig()
+    for r in a:
+        assert 1 <= r.prompt_len <= cfg.max_prompt
+        assert 1 <= r.out_tokens <= cfg.max_output
+        assert all(1 <= t < cfg.vocab for t in r.prompt)  # 0 reserved for EOS
+    assert [r.arrival for r in a] == sorted(r.arrival for r in a)
+    s = trace_summary(a)
+    assert s["n_requests"] == len(a) and s["prompt_p99"] >= s["prompt_p50"]
+
+
+# ---------------------------------------------------------------------------
+# continuous batcher: end-to-end, equivalence, compile bounds
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_serves_trace_and_releases_every_page(served):
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**SMALL_TRACE, vocab=cfg.vocab_size))
+    b = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=32)
+    b.params = params
+    verdicts = run_trace(b, trace)
+    assert REJECT not in verdicts
+    assert set(b.results) == {r.rid for r in trace}
+    for r in trace:
+        assert len(b.results[r.rid]["tokens"]) == r.out_tokens
+        assert b.results[r.rid]["first_token"] >= r.arrival
+        assert b.results[r.rid]["finish"] >= b.results[r.rid]["first_token"]
+    assert b.cache.pool.used_pages == 0, "finished sequences must free pages"
+    b.cache.pool.check_invariants()
+    assert b.idle and not b._journal
+
+
+def test_batcher_tokens_bit_identical_to_dense_path(served):
+    """The tentpole equivalence claim: in-flight joins/exits change *when*
+    work happens, never *what* each sequence computes."""
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**SMALL_TRACE, vocab=cfg.vocab_size))
+    b = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=32)
+    b.params = params
+    run_trace(b, trace)
+    for r in trace:
+        assert list(b.results[r.rid]["tokens"]) == dense_greedy(model, params, r), r.rid
+
+
+def test_batcher_compile_count_bounded_by_buckets(served):
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**{**SMALL_TRACE, "n_requests": 24},
+                                         vocab=cfg.vocab_size))
+    b = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=64)
+    b.params = params
+    run_trace(b, trace)
+    n_prompt_buckets = len({b.prompt_buckets.fit(r.prompt_len) for r in trace})
+    # prefill shapes: (joiner-rows bucket) x (prompt bucket) combinations
+    assert 1 <= b.prefill_compiles <= len(b.batch_buckets.sizes) * n_prompt_buckets
+    # decode shapes: (batch bucket) x (max-pages bucket) combinations
+    assert b.decode_compiles <= len(b.batch_buckets.sizes) * len(b.pages_buckets.sizes)
+    pre, dec = b.prefill_compiles, b.decode_compiles
+    b.reset()
+    run_trace(b, trace)  # same trace -> zero new compiles
+    assert (b.prefill_compiles, b.decode_compiles) == (pre, dec)
+
+
+def test_batcher_eos_exits_early_and_frees_pages(served):
+    cfg, model, params = served
+    b = ContinuousBatcher(model, n_pages=32, page_size=8)
+    b.params = params
+    # find what token the model emits first, then use it as the EOS id so
+    # the sequence stops at 1 generated token despite a 6-token budget
+    probe = Request(0, 0.0, (5, 6, 7), 6)
+    b.submit(probe, 0.0)
+    b.drain(0.0)
+    eos = b.results[0]["tokens"][0]
+    b2 = ContinuousBatcher(model, n_pages=32, page_size=8, eos_id=int(eos))
+    b2.params = params
+    b2.submit(Request(1, 0.0, (5, 6, 7), 6), 0.0)
+    b2.drain(0.0)
+    assert b2.results[1]["tokens"] == (eos,)
+    assert b2.cache.pool.used_pages == 0
+
+
+def test_batcher_queue_admits_as_pages_free(served):
+    """A pool sized for ~1 request at a time still serves the whole trace:
+    arrivals queue and join as predecessors finish."""
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(
+        n_requests=6, seed=5, rate=512.0, prompt_median=8, max_prompt=16,
+        out_median=4, max_output=6, vocab=cfg.vocab_size))
+    b = ContinuousBatcher(model, n_pages=7, page_size=8, max_queue=16)
+    b.params = params
+    verdicts = run_trace(b, trace)
+    assert QUEUE in verdicts, "pool this small must force queueing"
+    assert REJECT not in verdicts
+    assert set(b.results) == {r.rid for r in trace}
+    for r in trace:
+        assert list(b.results[r.rid]["tokens"]) == dense_greedy(model, params, r)
+
+
+def test_batcher_rejects_never_ghost(served):
+    """Rate-rejected requests are dropped at the door: no journal entry, no
+    result, and the rest of the trace is unaffected."""
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**SMALL_TRACE, vocab=cfg.vocab_size))
+    b = ContinuousBatcher(model, n_pages=64, page_size=8, rate=60.0, burst=60.0)
+    b.params = params
+    verdicts = run_trace(b, trace)
+    assert REJECT in verdicts, "tight rate must shed something"
+    rejected = {r.rid for r, v in zip(trace, verdicts) if v == REJECT}
+    assert rejected.isdisjoint(b.results)
+    assert set(b.results) == {r.rid for r in trace} - rejected
+    assert b.admission.stats.rejected_rate == len(rejected)
+
+
+# ---------------------------------------------------------------------------
+# chaos: pilot crash mid-trace
+# ---------------------------------------------------------------------------
+
+
+def test_crash_mid_trace_recovers_no_dupes_no_losses(served):
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**SMALL_TRACE, vocab=cfg.vocab_size))
+    ref = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=32)
+    ref.params = params
+    run_trace(ref, trace)
+
+    for crash_at in (0, len(trace) // 2, len(trace) - 1):
+        b = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=32)
+        b.params = params
+        now = 0.0
+        for i, r in enumerate(trace):
+            now = max(now, r.arrival)
+            b.submit(r, now)
+            now += b.step(now)
+            if i == crash_at:
+                b.crash()
+                assert b.cache.pool.used_pages == 0
+                b.recover()
+        b.drain(now)
+        assert set(b.results) == set(ref.results), crash_at
+        for rid in ref.results:
+            assert b.results[rid]["tokens"] == ref.results[rid]["tokens"], (crash_at, rid)
+        b.cache.pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Pallas decode kernel through the scheduler (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_decode_matches_jnp_through_batcher(served):
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**{**SMALL_TRACE, "n_requests": 6},
+                                         vocab=cfg.vocab_size))
+    ref = ContinuousBatcher(model, n_pages=64, page_size=8)
+    ref.params = params
+    run_trace(ref, trace)
+    ker = ContinuousBatcher(model, n_pages=64, page_size=8,
+                            use_kernel=True, interpret=True)
+    ker.params = params
+    run_trace(ker, trace)
+    for r in trace:
+        assert ker.results[r.rid]["tokens"] == ref.results[r.rid]["tokens"], r.rid
+
+
+# ---------------------------------------------------------------------------
+# LMServeApp drop-in
+# ---------------------------------------------------------------------------
+
+
+def _msgs(cfg, rng, n_msgs=2, batch=2, prompt_len=12):
+    return [Msg(rng.integers(1, cfg.vocab_size, size=(batch, prompt_len)).astype(np.int32))
+            for _ in range(n_msgs)]
+
+
+def test_lm_serve_continuous_matches_lockstep(served):
+    from repro.miniapps import LMServeApp
+
+    cfg, model, params = served
+    rng = np.random.default_rng(11)
+    msgs = _msgs(cfg, rng)
+    lock = LMServeApp(cfg, prompt_len=12, gen_tokens=5, batch=2)
+    cont = LMServeApp(cfg, prompt_len=12, gen_tokens=5, batch=2,
+                      mode="continuous", n_pages=64, page_size=8)
+    p_lock = lock.model.init(jax.random.key(0))
+    p_cont = cont.model.init(jax.random.key(0))
+    a = lock.generate_tokens(p_lock, msgs)
+    c = cont.generate_tokens(p_cont, msgs)
+    assert a.shape == c.shape == (4, 5)
+    np.testing.assert_array_equal(a, c)
+
+
+def test_lm_serve_prefill_compiles_once_per_row_bucket(served):
+    """Satellite: the in-jit cache growth must not recompile per batch."""
+    from repro.miniapps import LMServeApp
+
+    cfg, model, params = served
+    rng = np.random.default_rng(12)
+    app = LMServeApp(cfg, prompt_len=12, gen_tokens=4, batch=2)
+    p = app.model.init(jax.random.key(0))
+    app.generate_tokens(p, _msgs(cfg, rng))
+    assert app.prefill_compiles == 1
+    for _ in range(3):  # same row bucket -> no new compiles
+        app.generate_tokens(p, _msgs(cfg, rng))
+    assert app.prefill_compiles == 1
+    assert app.compiles == 1  # fused scan decode likewise
+
+
+def test_lm_serve_continuous_process_counts_and_gauges(served):
+    from repro.elastic.metrics import MetricsBus
+    from repro.miniapps import LMServeApp
+
+    cfg, model, params = served
+    bus = MetricsBus()
+    app = LMServeApp(cfg, prompt_len=12, gen_tokens=4, batch=2,
+                     mode="continuous", n_pages=64, page_size=8, metrics=bus)
+    p = app.model.init(jax.random.key(0))
+    rng = np.random.default_rng(13)
+    app.process(p, _msgs(cfg, rng))
+    app.sync()
+    assert app.stats.batches == 1 and app.stats.items == 4 * 4
+    assert bus.latest("serving.page_utilization") is not None
+    assert bus.latest("serving.free_pages").value > 0
+
+
+def test_batcher_decode_quantum_bit_identical(served):
+    """quantum>1 decodes q tokens per dispatch (gather-once scan + masked
+    scatter); greedy decode is prefix-stable, so results must not change."""
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**SMALL_TRACE, vocab=cfg.vocab_size))
+    ref = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=32)
+    ref.params = params
+    run_trace(ref, trace)
+    q = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=32,
+                          decode_quantum=4)
+    q.params = params
+    run_trace(q, trace)
+    for r in trace:
+        assert list(q.results[r.rid]["tokens"]) == list(ref.results[r.rid]["tokens"]), r.rid
+        assert len(q.results[r.rid]["tokens"]) == r.out_tokens  # budget mask holds
+    assert q.cache.pool.used_pages == 0
+
+
+def test_batcher_burst_stacked_prefill_matches_dense(served):
+    """All requests submitted at t=0: joiners group into multi-row prefill
+    dispatches (one per prompt bucket), which must scatter every row's pages."""
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**{**SMALL_TRACE, "rate": 1e9},
+                                         vocab=cfg.vocab_size))
+    b = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=32)
+    b.params = params
+    now = 0.0
+    for r in trace:
+        assert b.submit(r, now) is not REJECT
+    b.drain(now)
+    n_prompt_buckets = len({b.prompt_buckets.fit(r.prompt_len) for r in trace})
+    # the burst admits together -> at most one dispatch per (rows, prompt) bucket
+    assert b.prefill_compiles <= len(b.batch_buckets.sizes) * n_prompt_buckets
+    for r in trace:
+        assert list(b.results[r.rid]["tokens"]) == dense_greedy(model, params, r), r.rid
+
+
+def test_batcher_warmup_precompiles_all_buckets(served):
+    """After warmup() bounded by the trace's shape envelope, a replay performs
+    zero additional compiles -- the benchmark's no-leak guarantee."""
+    cfg, model, params = served
+    trace = heavy_tail_trace(TraceConfig(**SMALL_TRACE, vocab=cfg.vocab_size))
+    b = ContinuousBatcher(model, n_pages=64, page_size=8, max_queue=32)
+    b.params = params
+    compiled = b.warmup(max_prompt=max(r.prompt_len for r in trace),
+                        max_tokens=max(r.prompt_len + r.out_tokens for r in trace))
+    assert compiled > 0
+    pre, dec = b.prefill_compiles, b.decode_compiles
+    run_trace(b, trace)
+    assert (b.prefill_compiles, b.decode_compiles) == (pre, dec), \
+        "trace visited a shape the warmup sweep missed"

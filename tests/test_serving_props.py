@@ -1,0 +1,123 @@
+"""Property suite (hypothesis) for the serving page allocator + traces.
+
+The allocator invariants that make paged serving safe to run unattended:
+
+* page 0 (the scratch page padded tables point at) is never allocated and
+  never enters the free list;
+* no page is ever owned by two sequences or simultaneously free and owned;
+* pages are conserved across ANY sequence of alloc/ensure/release/reset —
+  never leaked, never invented;
+* ``alloc`` is atomic: a refused request changes nothing;
+* release returns exactly what was allocated, and a full
+  alloc-all/release-all cycle restores full capacity.
+
+Plus: the heavy-tail trace generator is a pure function of its config —
+byte-identical replays are what make the lockstep-vs-continuous benchmark a
+controlled comparison (engine-level replay determinism is the crash test in
+``tests/test_serving.py``).
+
+``tests/test_serving.py`` holds the always-run engine-level suite.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import PageAllocError, PagePool, TraceConfig, heavy_tail_trace
+
+# one op of the allocator fuzz program: (kind, seq id, token count)
+_ops = st.lists(
+    st.tuples(
+        st.sampled_from(["alloc", "ensure", "release", "reset"]),
+        st.integers(0, 7),
+        st.integers(0, 64),
+    ),
+    max_size=60,
+)
+
+
+@given(st.integers(2, 40), st.integers(1, 16), _ops)
+@settings(max_examples=120, deadline=None)
+def test_pool_invariants_hold_under_any_program(n_pages, page_size, ops):
+    pool = PagePool(n_pages, page_size)
+    for kind, seq, n_tokens in ops:
+        free_before = pool.free_pages
+        owned_before = len(pool.owned(seq))
+        if kind == "alloc":
+            n = pool.pages_for(n_tokens)
+            try:
+                ok = pool.alloc(seq, n)
+            except PageAllocError:
+                assert n > pool.capacity_pages
+                ok = None
+            if ok is False:  # refused: atomic, nothing changed
+                assert pool.free_pages == free_before
+                assert len(pool.owned(seq)) == owned_before
+            elif ok:
+                assert len(pool.owned(seq)) == owned_before + n
+        elif kind == "ensure":
+            try:
+                ok = pool.ensure(seq, n_tokens)
+            except PageAllocError:
+                ok = None
+            if ok:
+                assert pool.capacity_tokens(seq) >= n_tokens
+            elif ok is False:
+                assert pool.free_pages == free_before
+        elif kind == "release":
+            freed = pool.release(seq)
+            assert freed == owned_before
+            assert pool.free_pages == free_before + freed
+            assert pool.owned(seq) == []
+        else:
+            pool.reset()
+            assert pool.free_pages == pool.capacity_pages
+            assert pool.sequences() == set()
+        pool.check_invariants()
+    # full drain restores full capacity
+    for seq in list(pool.sequences()):
+        pool.release(seq)
+    assert pool.free_pages == pool.capacity_pages
+    pool.check_invariants()
+
+
+@given(st.integers(2, 30), st.integers(1, 8), st.integers(0, 6))
+@settings(max_examples=60, deadline=None)
+def test_pool_alloc_all_then_release_all_roundtrips(n_pages, page_size, n_seqs):
+    pool = PagePool(n_pages, page_size)
+    per = pool.capacity_pages // max(n_seqs, 1)
+    placed = []
+    for s in range(n_seqs):
+        if per and pool.alloc(s, per):
+            placed.append(s)
+    assert pool.used_pages == per * len(placed)
+    # LIFO determinism: the same program hands out the same pages
+    pool2 = PagePool(n_pages, page_size)
+    for s in placed:
+        assert pool2.alloc(s, per)
+        assert pool2.owned(s) == pool.owned(s)
+    for s in placed:
+        pool.release(s)
+    assert pool.free_pages == pool.capacity_pages
+    pool.check_invariants()
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 40))
+@settings(max_examples=40, deadline=None)
+def test_trace_replay_is_byte_identical(seed, n):
+    cfg = TraceConfig(n_requests=n, seed=seed)
+    a, b = heavy_tail_trace(cfg), heavy_tail_trace(cfg)
+    assert a == b
+    for r in a:
+        assert 1 <= r.prompt_len <= cfg.max_prompt
+        assert 1 <= r.out_tokens <= cfg.max_output
+        assert all(1 <= t < cfg.vocab for t in r.prompt)
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[0] > 0.0
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_trace_overrides_equal_explicit_config(seed):
+    assert heavy_tail_trace(TraceConfig(), seed=seed, n_requests=9) == \
+        heavy_tail_trace(TraceConfig(seed=seed, n_requests=9))
