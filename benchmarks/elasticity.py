@@ -113,8 +113,19 @@ def run(duration_scale: float = 1.0):
     downs = ctl.events.of("scale_down")
     if ups:
         up = ups[0]
-        crossings = [t for t, v in lag_series if v > HIGH_LAG and t <= up.t]
-        react = up.t - crossings[0] if crossings else float("nan")
+        # reaction = scale-up minus the crossing that *started* the episode
+        # the policy reacted to: the last low->high transition at or before
+        # up.t. The first crossing ever may belong to an earlier excursion
+        # that drained on its own, which would overstate the reaction time.
+        episode_start = None
+        above = False
+        for t, v in lag_series:
+            if t > up.t:
+                break
+            if v >= HIGH_LAG and not above:
+                episode_start = t
+            above = v >= HIGH_LAG
+        react = up.t - episode_start if episode_start is not None else float("nan")
         rows.append(("elasticity_scale_up_reaction", react * 1e6,
                      f"devices={up.devices_before}->{up.devices_after}"))
         recovered = [t for t, v in lag_series if t > up.t and v < HIGH_LAG]

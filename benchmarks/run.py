@@ -14,7 +14,7 @@ import sys
 import traceback
 
 SUITES = ("startup", "latency", "producer_throughput", "processing_throughput",
-          "elasticity", "kernel_bench", "hotpath")
+          "elasticity", "predictive", "kernel_bench", "hotpath")
 
 
 def _roofline_rows() -> list[tuple[str, float, str]]:

@@ -5,8 +5,13 @@ bus (``MetricsBus``) -> policy (``ScalingPolicy``) -> reconciler
 (``ElasticController``) -> pilots (``submit_pilot(parent=...)`` / ``cancel``).
 See docs/elastic.md for the architecture and a quickstart.
 """
-from repro.elastic.controller import ElasticConfig, ElasticController
+from repro.elastic.controller import (
+    ElasticConfig,
+    ElasticController,
+    PreemptionHooks,
+)
 from repro.elastic.events import EventLog, ScalingEvent, timeline
+from repro.elastic.forecast import ForecastPolicy
 from repro.elastic.metrics import (
     BatchMetrics,
     ContinuousStats,
@@ -36,11 +41,13 @@ __all__ = [
     "ElasticConfig",
     "ElasticController",
     "EventLog",
+    "ForecastPolicy",
     "HOLD",
     "LatencyPolicy",
     "MetricsBus",
     "MetricsSnapshot",
     "PIDScalingPolicy",
+    "PreemptionHooks",
     "Sample",
     "SLOPolicy",
     "ScalingDecision",

@@ -34,6 +34,36 @@ from repro.elastic.policy import HOLD, ScalingDecision, ScalingPolicy
 
 
 @dataclass
+class PreemptionHooks:
+    """Checkpoint-then-kill wiring for whole-pilot preemption.
+
+    When the arbiter drives a checkpointing continuous stage to zero
+    devices, revoking the pilot out from under the stream would lose
+    everything since its consumer's last commit — and a plain
+    ``stream.stop()`` would delete the very spools a later resume needs
+    (teardown cleans up). These three callbacks let the controller *park*
+    the stage instead:
+
+    * ``checkpoint()`` — force an ``sckpt_*`` spool of the live stream
+      (a consistent cut: state partitions + consumer positions + counters);
+    * ``kill()`` — fence the stream (detach it from its plugin so the
+      pilot cancel below cannot ``stop()`` it, then ``crash()`` it) —
+      after this the old incarnation cannot emit;
+    * ``resume(pilot)`` — attach the stream to the replacement pilot's
+      plugin and ``recover()`` it from the pre-kill spool (exactly-once:
+      replayed firings re-fire with their emit suppressed).
+
+    Built by the pipeline runner for continuous stages with
+    ``checkpoint_every > 0`` and ``min_devices == 0``; usable by hand for
+    imperative wiring (see tests/test_preemption.py).
+    """
+
+    checkpoint: Callable[[], None]
+    kill: Callable[[], None]
+    resume: Callable[[object], None]
+
+
+@dataclass
 class ElasticConfig:
     interval: float = 0.5  # seconds between reconcile passes
     min_devices: int = 1  # never shrink the pipeline below this
@@ -70,6 +100,7 @@ class ElasticController:
         arbiter=None,
         request=None,
         unit: str = "devices",
+        hooks: PreemptionHooks | None = None,
     ):
         self.service = service
         self.pilot = pilot  # base pilot; extensions hang off it
@@ -90,6 +121,12 @@ class ElasticController:
         #: without it a shared bus mixes every stream's latency/busy gauges
         self.stream = stream
         self.probes = dict(probes or {})
+        #: checkpoint-then-kill preemption (None = the pre-existing
+        #: behavior: scale_to(0) shrinks extensions and keeps the base)
+        self.hooks = hooks
+        #: True while the whole stage is preempted: no pilot, no devices,
+        #: state parked in its last sckpt spool awaiting a regrant
+        self.parked = False
         self.events = EventLog()
         self.extensions: list = []  # pilots we created, newest last
         self._last_action_t = -float("inf")
@@ -144,7 +181,7 @@ class ElasticController:
         # adding up_stable*interval of latency after every cooldown collision
         if now - self._last_action_t < self.config.cooldown:
             applied = HOLD
-        elif self._migration_deferred(now):
+        elif self._migration_deferred(now, snap):
             # the last state migration was expensive relative to the
             # reconcile cadence: let it amortize before paying for another
             self.bus.publish("elastic.rescale_deferred", 1.0, t=now, **labels)
@@ -160,26 +197,26 @@ class ElasticController:
     def _labels(self) -> dict:
         return {} if self.stream is None else {"stream": self.stream}
 
-    def _migration_deferred(self, now: float) -> bool:
+    def _migration_deferred(self, now: float, snap: MetricsSnapshot) -> bool:
         """True while the last keyed-state migration is still amortizing
         (``MetricsSnapshot.state_migration_ms`` consumer). The gauge is
         latched — the engine republishes the *last* migration's cost
-        forever — so the gate keys off the sample's timestamp: defer only
-        until ``cost / (now - sample.t)`` drops to ``migration_cost_frac``.
+        forever — so the gate keys off the sample's timestamp
+        (``state_migration_t``): defer only until ``cost / (now - t)``
+        drops to ``migration_cost_frac``. Reads the snapshot, not the bus:
+        the gate must see the same stream-filtered view the policy decided
+        on, never a newer (or other stage's) sample published since the
+        capture.
         """
         frac = self.config.migration_cost_frac
         if frac is None or frac <= 0:
             return False
-        if self.stream is None:
-            sample = self.bus.latest("state.migration_ms")
-        else:
-            sample = self.bus.latest("state.migration_ms", stream=self.stream)
-        if sample is None:
+        if snap.state_migration_ms <= 0.0:
             return False
-        cost_s = sample.value / 1e3
+        cost_s = snap.state_migration_ms / 1e3
         if cost_s <= frac * self.config.interval:
             return False  # cheap migration: never worth deferring for
-        return now < sample.t + cost_s / frac
+        return now < snap.state_migration_t + cost_s / frac
 
     def _desired(self, decision: ScalingDecision) -> int | None:
         """Fold a policy delta into an absolute resource target (the same
@@ -218,18 +255,32 @@ class ElasticController:
     def scale_to(self, n: int) -> int:
         """Idempotent absolute actuator (the arbiter's grant callback):
         grow/shrink extension pilots until ``n`` resources serve the
-        consumer. Returns the count actually reached."""
+        consumer. Returns the count actually reached.
+
+        With :class:`PreemptionHooks` wired and ``min_devices == 0``, a
+        grant of 0 *parks* the whole stage — checkpoint, fence, cancel
+        every pilot including the base — and the next non-zero grant
+        resubmits the base pilot and resumes the stream from its pre-kill
+        spool (exactly-once). Without hooks, 0 shrinks extensions only and
+        the base pilot keeps its floor, as before."""
         t0 = time.perf_counter()
         with self._lock:
             before = self.devices
-            if n > before:
-                want = n - before
+            if self.parked:
+                if n > 0:
+                    self._unpark()  # base pilot back; stream resumed
+            elif (n <= 0 and self.hooks is not None
+                    and self.config.min_devices == 0 and before > 0):
+                self._park()
+            cur = self.devices
+            if not self.parked and n > cur:
+                want = n - cur
                 if self.unit == "devices":
                     want = min(want, self.service.pool.free_devices)
                 if want > 0:
                     self._grow(want)
-            elif n < before:
-                self._shrink(before - n)
+            elif not self.parked and n < cur:
+                self._shrink(cur - n)
             after = self.devices
         if after != before:
             now = time.monotonic()
@@ -247,6 +298,46 @@ class ElasticController:
             self.bus.publish("elastic.actuation_ms",
                              (time.perf_counter() - t0) * 1e3, t=now, **labels)
         return after
+
+    def _park(self) -> None:
+        """Checkpoint-then-kill: spool the stream's state, fence it, then
+        cancel every pilot (extensions and base). Caller holds the lock.
+        Order matters — the kill hook detaches the stream from the base
+        pilot's plugin *before* the cancels, so ``plugin.cancel`` cannot
+        ``stop()`` it (stop deletes the spools the resume needs)."""
+        now = time.monotonic()
+        before = self.devices
+        self.hooks.checkpoint()
+        self.hooks.kill()
+        exts, self.extensions = list(self.extensions), []
+        for p in reversed(exts):
+            try:
+                p.cancel()
+            except Exception:
+                self.bus.publish("elastic.errors", 1.0)
+                self.service._release(p)
+        try:
+            self.pilot.cancel()
+        except Exception:
+            self.bus.publish("elastic.errors", 1.0)
+            self.service._release(self.pilot)
+        self.parked = True
+        self.events.record(ScalingEvent(now, "park", -before, before, 0,
+                                        "preempted to zero: checkpoint-then-kill"))
+        self.bus.publish("elastic.parked", 1.0, t=now, **self._labels())
+
+    def _unpark(self) -> None:
+        """Reverse of :meth:`_park`: resubmit the base pilot (same PCD,
+        possibly different devices) and resume the stream from its pre-kill
+        spool. Caller holds the lock."""
+        now = time.monotonic()
+        self.pilot = self.service.submit_pilot(self.pilot.pcd)
+        self.parked = False
+        self.hooks.resume(self.pilot)
+        after = self.devices
+        self.events.record(ScalingEvent(now, "unpark", after, 0, after,
+                                        "regranted: resumed from checkpoint"))
+        self.bus.publish("elastic.parked", 0.0, t=now, **self._labels())
 
     def _apply(self, decision: ScalingDecision, snap: MetricsSnapshot, now: float) -> ScalingDecision:
         if decision.delta_devices == 0:

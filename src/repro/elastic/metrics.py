@@ -133,11 +133,16 @@ class MetricsBus:
     def latest_by_label(self, name: str, label: str) -> dict[str, float]:
         """Latest value per distinct value of ``label`` (e.g. per-stage
         demand for the bin-packing policy)."""
-        out: dict[str, float] = {}
+        return {k: s.value for k, s in self.samples_by_label(name, label).items()}
+
+    def samples_by_label(self, name: str, label: str) -> dict[str, Sample]:
+        """Like :meth:`latest_by_label` but whole samples — for readers
+        that need the timestamp too (e.g. migration-cost amortization)."""
+        out: dict[str, Sample] = {}
         with self._lock:
             for (n, _), s in self._latest.items():
                 if n == name:
-                    out[s.label(label, "")] = s.value
+                    out[s.label(label, "")] = s
         return out
 
     def history(self, name: str | None = None, since: float = 0.0) -> list[Sample]:
@@ -238,6 +243,12 @@ class MetricsSnapshot:
     #: gauge, max over streams) — lets policies weigh rescale benefit
     #: against the disruption it costs
     state_migration_ms: float = 0.0
+    #: bus timestamp of the sample behind ``state_migration_ms`` — the
+    #: controller's amortization gate keys off it (the gauge is latched:
+    #: the engine republishes the *last* migration's cost forever), and
+    #: carrying it here keeps the gate on the same stream-filtered view
+    #: the policy decided on instead of re-reading the bus
+    state_migration_t: float = 0.0
 
     @classmethod
     def capture(cls, bus: MetricsBus, pool: Any | None = None,
@@ -279,7 +290,12 @@ class MetricsSnapshot:
             util = bus.value("pool.utilization")
         busy = max(_per_stream("stream.busy_frac").values(), default=0.0)
         stall = max(_per_stream("broker.stall_frac").values(), default=0.0)
-        migr = max(_per_stream("state.migration_ms").values(), default=0.0)
+        migr_samples = bus.samples_by_label("state.migration_ms", "stream")
+        if stream is not None:
+            migr_samples = {k: v for k, v in migr_samples.items() if k == stream}
+        migr_sample = max(migr_samples.values(), key=lambda s: s.value, default=None)
+        migr = 0.0 if migr_sample is None else migr_sample.value
+        migr_t = 0.0 if migr_sample is None else migr_sample.t
         p50 = max(_per_stream("stream.latency_p50").values(), default=0.0)
         p99 = max(_per_stream("stream.latency_p99").values(), default=0.0)
         demands = _per_stream("stream.records_per_sec")
@@ -305,4 +321,5 @@ class MetricsSnapshot:
             latency_p99=p99,
             broker_stall_frac=stall,
             state_migration_ms=migr,
+            state_migration_t=migr_t,
         )

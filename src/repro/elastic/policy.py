@@ -71,7 +71,10 @@ class ThresholdHysteresisPolicy(ScalingPolicy):
     _below: int = field(default=0, repr=False)
 
     def decide(self, snap: MetricsSnapshot) -> ScalingDecision:
-        if snap.lag > self.high_lag:
+        # inclusive up-leg (>=), like every other hysteresis policy here: a
+        # signal sitting exactly on the watermark must accumulate toward
+        # up_stable, not fall into the in-band else and zero both counters
+        if snap.lag >= self.high_lag:
             self._above += 1
             self._below = 0
         elif snap.lag < self.low_lag and snap.busy_frac < self.max_busy_for_down:
@@ -81,7 +84,7 @@ class ThresholdHysteresisPolicy(ScalingPolicy):
             self._above = self._below = 0
         if self._above >= self.up_stable:
             self._above = 0
-            return ScalingDecision(self.step, f"lag {snap.lag:.0f} > {self.high_lag:.0f} "
+            return ScalingDecision(self.step, f"lag {snap.lag:.0f} >= {self.high_lag:.0f} "
                                               f"for {self.up_stable} observations")
         if self._below >= self.down_stable:
             self._below = 0
@@ -103,7 +106,7 @@ class PIDScalingPolicy(ScalingPolicy):
     kd: float = 0.0
     #: control units per device: u == lag_per_device means "one device short"
     lag_per_device: float = 100.0
-    deadband: float = 0.25  # |u|/lag_per_device below this -> hold
+    deadband: float = 0.25  # hold while |u| (already in device units) is below this
     integral_limit: float = 10.0  # in device units
 
     _latest_error: float = 0.0

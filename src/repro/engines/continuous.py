@@ -435,6 +435,22 @@ class ContinuousStream:
         # positions may now be reclaimed, slots above must survive a crash
         self._pin_replay_floor(self.consumer.positions())
 
+    def checkpoint(self) -> bool:
+        """Force an ``sckpt_*`` spool of the live stream right now — the
+        checkpoint-then-kill preemption entry point (docs/scheduler.md).
+        Grabs the state lock, so the cut is consistent with respect to the
+        record loop exactly like a periodic checkpoint. Returns False when
+        the stream doesn't checkpoint (``checkpoint_every == 0`` — the
+        caller's kill will fall back to full replay from the earliest
+        retained offsets) or is already stopped."""
+        if not self.checkpoint_every:
+            return False
+        with self._state_lock:
+            if self._stop.is_set():
+                return False
+            self._checkpoint_locked()
+        return True
+
     def crash(self) -> None:
         """Abrupt pilot death (fault injection): the record loop stops
         wherever it is — no final commit, no checkpoint, and, unlike

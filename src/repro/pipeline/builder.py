@@ -184,16 +184,21 @@ class Pipeline:
                 max_devices: int | None = None, devices_per_step: int = 1,
                 cooldown: float = 1.0,
                 migration_cost_frac: float | None = None,
+                preemptible: bool = False,
                 **params) -> "Pipeline":
         """Make ``stage`` elastic: ``policy`` + ``params`` select/configure
         the ScalingPolicy, the rest configure the controller.
         ``migration_cost_frac`` holds rescales while the last keyed-state
-        migration is still amortizing (continuous stages)."""
+        migration is still amortizing (continuous stages).
+        ``preemptible=True`` lets a zero-device grant park the whole stage
+        via checkpoint-then-kill instead of keeping the base pilot's floor
+        (continuous + checkpoint_every > 0 + min_devices == 0 only)."""
         self._elastic[stage] = ElasticSpec(
             policy=policy, params=params, interval=interval,
             min_devices=min_devices, max_devices=max_devices,
             devices_per_step=devices_per_step, cooldown=cooldown,
             migration_cost_frac=migration_cost_frac,
+            preemptible=preemptible,
         )
         return self
 
@@ -432,6 +437,22 @@ class Pipeline:
         for stage_name, el in self._elastic.items():
             if stage_name not in by_name:
                 errors.append(f"elastic policy attached to unknown stage {stage_name!r}")
+            if el.preemptible and stage_name in by_name:
+                target = by_name[stage_name]
+                # parking cancels the base pilot; only a checkpointing
+                # continuous stream can be resumed from a spool afterwards
+                if target.engine != "continuous" or not target.checkpoint_every:
+                    errors.append(
+                        f"elastic on {stage_name!r}: preemptible=True requires "
+                        "the continuous engine with checkpoint_every > 0 "
+                        "(parking resumes from a crash checkpoint)"
+                    )
+                if el.min_devices != 0:
+                    errors.append(
+                        f"elastic on {stage_name!r}: preemptible=True requires "
+                        f"min_devices == 0 (got {el.min_devices}) — a nonzero "
+                        "floor means the stage is never driven to zero"
+                    )
             try:
                 cls = registry.resolve_policy(el.policy)
             except KeyError as e:
@@ -500,6 +521,7 @@ def _stage_kwargs(s: StageSpec) -> dict:
         "executor": s.executor,
         "checkpoint_every": s.checkpoint_every,
         "transport": s.transport,
+        "async_emit": s.async_emit,
         "options": dict(s.options),
         "priority": s.priority, "share": s.share,
         "colocate_with": s.colocate_with,

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 from typing import Any, Callable
 
+from repro.elastic.forecast import ForecastPolicy
 from repro.elastic.policy import (
     BinPackingPolicy,
     BrokerSaturationPolicy,
@@ -27,6 +28,7 @@ POLICIES: dict[str, type] = {
     "latency": LatencyPolicy,
     "slo": SLOPolicy,
     "broker_saturation": BrokerSaturationPolicy,
+    "forecast": ForecastPolicy,
 }
 
 _SOURCES: dict[str, Callable] = {}

@@ -25,7 +25,12 @@ import time
 from repro.broker.consumer import Consumer, ConsumerGroup
 from repro.broker.producer import Producer
 from repro.core import PilotComputeService
-from repro.elastic import ElasticConfig, ElasticController, MetricsBus
+from repro.elastic import (
+    ElasticConfig,
+    ElasticController,
+    MetricsBus,
+    PreemptionHooks,
+)
 from repro.pipeline import registry
 from repro.pipeline.spec import ElasticSpec, PipelineSpec, SinkSpec, StageSpec
 from repro.scheduler import HOSTS, ResourceRequest
@@ -492,7 +497,50 @@ class PipelineRun:
             stream=stream.metrics_label,
             arbiter=self.arbiter,
             request=request,
+            hooks=(self._make_preemption_hooks(stage, stream)
+                   if el.preemptible else None),
         )
+
+    def _make_preemption_hooks(self, stage: StageSpec, stream) -> PreemptionHooks:
+        """Checkpoint-then-kill wiring for a preemptible stage (builder
+        guarantees: continuous engine, checkpoint_every > 0,
+        min_devices == 0). The kill hook detaches the stream from its
+        plugin *before* the controller cancels the pilots — a plugin-driven
+        ``stream.stop()`` would delete the sckpt spools the resume needs —
+        and unmanages the pilot so the reconciler cannot mistake the
+        deliberate cancel for a crash."""
+        name = stage.name
+        pcd = {"number_of_nodes": stage.nodes,
+               "cores_per_node": stage.cores_per_node, "type": "flink"}
+
+        def checkpoint() -> None:
+            stream.checkpoint()
+
+        def kill() -> None:
+            pilot = self._pilots[name]
+            plugin = getattr(pilot, "plugin", None)
+            if plugin is not None and stream in getattr(plugin, "streams", ()):
+                plugin.streams.remove(stream)
+            if self.reconciler is not None:
+                self.reconciler.unmanage(pilot)
+            stream.crash()
+
+        def resume(pilot) -> None:
+            plugin = pilot.plugin
+            if hasattr(plugin, "streams") and stream not in plugin.streams:
+                plugin.streams.append(stream)
+            stream.recover()
+            # the replacement pilot may hold different device ids than the
+            # parked one (that's the whole point of preemption): re-home the
+            # restored state onto the new owner set
+            devs = list(getattr(plugin, "devices", []) or [])
+            if devs:
+                stream.rescale(devs)
+            self._pilots[name] = pilot
+            if self.reconciler is not None:
+                self.reconciler.manage(name, pilot, stream, pcd)
+
+        return PreemptionHooks(checkpoint, kill, resume)
 
     def _make_broker_controller(self, el: ElasticSpec) -> ElasticController:
         """Spec-driven broker elasticity: a node-unit controller estimates

@@ -101,6 +101,13 @@ class ElasticSpec:
     #: hold rescales while the last keyed-state migration is still
     #: amortizing (see ``ElasticConfig.migration_cost_frac``); None = off
     migration_cost_frac: float | None = None
+    #: opt the stage into checkpoint-then-kill preemption: when the arbiter
+    #: drives it to zero devices, the runner checkpoints the stream, fences
+    #: it and cancels the whole pilot (base included); the next grant
+    #: resubmits the pilot and resumes from the pre-kill spool. Requires
+    #: the continuous engine, ``checkpoint_every > 0`` and
+    #: ``min_devices == 0`` (builder-validated); see docs/scheduler.md
+    preemptible: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "params", _freeze_options(self.params))

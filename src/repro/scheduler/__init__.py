@@ -2,19 +2,29 @@
 
 One :class:`ResourceArbiter` per :class:`PilotComputeService` mediates every
 consumer's demand — pipeline stages, the broker, training drivers — against
-the shared ``DevicePool``: weighted fair share within priority tiers, FFD
-bin-packing for placement, preemption under pressure. Consumers file
-:class:`ResourceRequest`\\ s instead of acquiring pilots themselves; see
-docs/scheduler.md for the request/grant lifecycle.
+the shared ``DevicePool``: weighted fair share within priority tiers, gang
+(all-or-nothing) grants for ``colocate_with`` groups, online bin-packing
+for placement (:class:`OnlinePacker` — bins are amended, not recomputed),
+preemption under pressure. Consumers file :class:`ResourceRequest`\\ s
+instead of acquiring pilots themselves; see docs/scheduler.md for the
+request/grant lifecycle.
 """
-from repro.scheduler.arbiter import PoolTenant, ResourceArbiter, weighted_fair_share
+from repro.scheduler.arbiter import (
+    PoolTenant,
+    ResourceArbiter,
+    colocation_groups,
+    weighted_fair_share,
+)
+from repro.scheduler.packing import OnlinePacker
 from repro.scheduler.request import DEVICES, HOSTS, ResourceRequest
 
 __all__ = [
     "DEVICES",
     "HOSTS",
+    "OnlinePacker",
     "PoolTenant",
     "ResourceArbiter",
     "ResourceRequest",
+    "colocation_groups",
     "weighted_fair_share",
 ]

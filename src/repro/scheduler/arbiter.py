@@ -12,14 +12,19 @@ each reconcile tick the arbiter
    within a tier (Stein et al., arXiv:2001.10865; de Assunção et al.,
    arXiv:1709.01363),
 3. actuates the diff — shrinks (revocations/preemptions) before grows so
-   freed devices are available to the grants that need them,
+   freed devices are available to the grants that need them; co-located
+   groups actuate as atomic **gang units** (all-or-nothing, rolled back on
+   partial success),
 4. publishes every decision to the MetricsBus as ``scheduler.*`` gauges
    and records grant/revoke/preempt events in an :class:`EventLog`.
 
-``placement()`` additionally packs the granted sizes into host-sized bins
-with first-fit-decreasing, honoring ``colocate_with`` hints — the
-spec-level placement story (co-located stages share one bin, and, at the
-runner layer, one pilot).
+``placement()`` additionally packs the granted sizes into host-sized bins,
+honoring ``colocate_with`` hints — the spec-level placement story
+(co-located stages share one bin, and, at the runner layer, one pilot).
+Since the predictive-scheduling PR the packing is *online*
+(:class:`repro.scheduler.packing.OnlinePacker`): bins are amended
+incrementally across ticks instead of re-running FFD from scratch, so an
+unchanged group never moves hosts.
 """
 from __future__ import annotations
 
@@ -29,7 +34,29 @@ from typing import Iterable
 
 from repro.elastic.events import EventLog, ScalingEvent
 from repro.elastic.metrics import MetricsBus
+from repro.scheduler.packing import OnlinePacker
 from repro.scheduler.request import DEVICES, HOSTS, ResourceRequest
+
+
+def colocation_groups(
+    requests: Iterable[ResourceRequest],
+) -> dict[str, list[ResourceRequest]]:
+    """Union ``colocate_with`` chains onto their (non-colocated) root:
+    root name -> member requests (singletons included, cycles tolerated).
+    The gang-scheduling and placement unit."""
+    reqs = {r.name: r for r in requests}
+    root: dict[str, str] = {}
+    for name in reqs:
+        t, seen = name, set()
+        while (reqs.get(t) is not None and reqs[t].colocate_with in reqs
+               and t not in seen):
+            seen.add(t)
+            t = reqs[t].colocate_with
+        root[name] = t
+    groups: dict[str, list[ResourceRequest]] = {}
+    for name, r in reqs.items():
+        groups.setdefault(root[name], []).append(r)
+    return groups
 
 
 def weighted_fair_share(
@@ -137,6 +164,9 @@ class ResourceArbiter:
         self._refs = 0
         self._ticks = 0
         self.preemptions = 0
+        #: incremental placement state (OnlinePacker), created on first
+        #: placement() call; sticky across ticks by design
+        self._packer: OnlinePacker | None = None
 
     # -- request book ---------------------------------------------------------
 
@@ -192,8 +222,36 @@ class ResourceArbiter:
         return self._allocate(reqs)
 
     def _allocate(self, reqs: list[ResourceRequest]) -> dict[str, int]:
+        """Fair share with **gang feasibility**: a ``colocate_with`` group
+        is all-or-nothing. If contention leaves any member of a multi-member
+        gang below a runnable grant (``max(1, min_devices)``) while a
+        sibling would run, the whole gang is withheld to its floors and the
+        freed capacity redistributed — no partial co-located group is ever
+        granted. Iterates until every surviving gang is whole (bounded by
+        the number of gangs)."""
         device_reqs = [r for r in reqs if r.unit == DEVICES]
-        alloc = weighted_fair_share(device_reqs, self._device_capacity(device_reqs))
+        capacity = self._device_capacity(device_reqs)
+        active = list(device_reqs)
+        withheld: dict[str, int] = {}
+        while True:
+            alloc = weighted_fair_share(active, capacity - sum(withheld.values()))
+            infeasible: list[list[ResourceRequest]] = []
+            for members in colocation_groups(active).values():
+                if len(members) < 2:
+                    continue
+                runnable = [m for m in members
+                            if alloc.get(m.name, 0) >= max(1, m.min_devices)]
+                # all runnable = whole gang placed; none runnable = gang
+                # atomically at zero (nothing placed) — both are fine.
+                if runnable and len(runnable) < len(members):
+                    infeasible.append(members)
+            if not infeasible:
+                break
+            for members in infeasible:
+                for m in members:
+                    withheld[m.name] = m.min_devices
+                    active.remove(m)
+        alloc.update(withheld)
         # host-unit requests (broker nodes) are logical slots: clamp, don't
         # contend — the DevicePool's host slots are unbounded
         for r in reqs:
@@ -206,9 +264,18 @@ class ResourceArbiter:
     def reconcile(self) -> dict[str, int]:
         """One scheduling pass: allocate, then actuate the diff.
 
-        Shrinks run before grows (freed devices fund the grants), and
-        actuators are only invoked on a changed allocation, so repeated
-        reconciles with unchanged demand are no-ops (grant idempotence).
+        Actuation is by **gang unit**: a ``colocate_with`` group's members
+        actuate together (shrinks first within the unit), and if any member
+        fails — its actuator raises, or reaches less than the allocation —
+        every member already actuated in that unit is rolled back to its
+        pre-pass size. A co-located group is therefore never left partially
+        granted, no matter where mid-flight contention bites. Singleton
+        units keep the old per-request semantics (a clamped grant stands).
+
+        Units with net shrinks run before net grows (freed devices fund the
+        grants), and actuators are only invoked on a changed allocation, so
+        repeated reconciles with unchanged demand are no-ops (grant
+        idempotence).
 
         One snapshot of the request book feeds both sizing and actuation:
         a request submitted mid-pass is simply not scheduled until the
@@ -220,41 +287,72 @@ class ResourceArbiter:
         with self._lock:
             reqs = list(self._requests.values())
         alloc = self._allocate(reqs)
-        by_delta = sorted(reqs, key=lambda r: alloc.get(r.name, 0) - r.current)
         granted: dict[str, int] = {}
-        for r in by_delta:  # most negative delta (biggest shrink) first
-            with self._lock:
-                if self._requests.get(r.name) is not r:
-                    continue  # withdrawn (or replaced) since the snapshot
-            want = alloc.get(r.name, 0)
-            cur = r.current
-            if r.actuator is None or want == cur:
-                r.granted = want if r.actuator is None else cur
-                granted[r.name] = r.granted
-                continue
-            try:
-                reached = r.actuator(want)
-            except Exception:
-                self.bus.publish("scheduler.errors", 1.0, request=r.name)
-                granted[r.name] = cur
-                continue
-            r.granted = reached
-            granted[r.name] = reached
-            action = "grant" if want > cur else (
-                # a shrink below the consumer's own demand was forced by
-                # someone else's priority/weight — that is a preemption
-                "preempt" if r.demand > want else "revoke"
-            )
-            if action == "preempt":
-                self.preemptions += 1
-                self.bus.publish("scheduler.preemptions", self.preemptions)
-            self.events.record(ScalingEvent(
-                now, action, reached - cur, cur, reached,
-                f"alloc {want} (demand {r.demand}, weight {r.weight}, "
-                f"priority {r.priority})",
-            ))
-            self.bus.publish("scheduler.event", float(reached - cur),
-                             request=r.name, action=action)
+
+        def delta(r: ResourceRequest) -> int:
+            return alloc.get(r.name, 0) - r.current
+
+        units = sorted(colocation_groups(reqs).values(),
+                       key=lambda unit: sum(delta(r) for r in unit))
+        for unit in units:  # most negative net delta (biggest shrink) first
+            gang = len(unit) > 1
+            done: list[tuple[ResourceRequest, int]] = []  # (req, prior size)
+            rollback = False
+            for r in sorted(unit, key=delta):
+                with self._lock:
+                    if self._requests.get(r.name) is not r:
+                        continue  # withdrawn (or replaced) since the snapshot
+                want = alloc.get(r.name, 0)
+                cur = r.current
+                if r.actuator is None or want == cur:
+                    r.granted = want if r.actuator is None else cur
+                    granted[r.name] = r.granted
+                    continue
+                try:
+                    reached = r.actuator(want)
+                except Exception:
+                    self.bus.publish("scheduler.errors", 1.0, request=r.name)
+                    granted[r.name] = cur
+                    if gang:
+                        rollback = True
+                        break
+                    continue
+                done.append((r, cur))
+                if gang and reached != want:
+                    rollback = True  # partial gang: undo the whole unit
+                    break
+                r.granted = reached
+                granted[r.name] = reached
+                action = "grant" if want > cur else (
+                    # a shrink below the consumer's own demand was forced by
+                    # someone else's priority/weight — that is a preemption
+                    "preempt" if r.demand > want else "revoke"
+                )
+                if action == "preempt":
+                    self.preemptions += 1
+                    self.bus.publish("scheduler.preemptions", self.preemptions)
+                self.events.record(ScalingEvent(
+                    now, action, reached - cur, cur, reached,
+                    f"alloc {want} (demand {r.demand}, weight {r.weight}, "
+                    f"priority {r.priority})",
+                ))
+                self.bus.publish("scheduler.event", float(reached - cur),
+                                 request=r.name, action=action)
+            if rollback:
+                for r, prior in reversed(done):
+                    try:
+                        r.actuator(prior)
+                    except Exception:
+                        self.bus.publish("scheduler.errors", 1.0, request=r.name)
+                    r.granted = r.current
+                    granted[r.name] = r.granted
+                    self.events.record(ScalingEvent(
+                        now, "gang_rollback", 0, prior, r.current,
+                        f"co-located group partially grantable only — "
+                        f"alloc {alloc.get(r.name, 0)} undone",
+                    ))
+                    self.bus.publish("scheduler.event", 0.0, request=r.name,
+                                     action="gang_rollback")
         for name, n in granted.items():
             self.bus.publish("scheduler.granted", n, request=name)
         self.bus.publish("scheduler.capacity", self.service.pool.total_devices)
@@ -265,32 +363,34 @@ class ResourceArbiter:
 
     def placement(self, allocation: dict[str, int] | None = None, *,
                   bin_size: int | None = None) -> list[list[str]]:
-        """FFD-pack the granted sizes into ``bin_size``-device bins, with
+        """Pack the granted sizes into ``bin_size``-device bins, with
         ``colocate_with`` groups merged so co-located requests always land
-        in the same bin. Default bin size: the whole pool (one host)."""
-        from repro.elastic.policy import first_fit_decreasing
+        in the same bin. Default bin size: the whole pool (one host).
 
+        Packing is **online** (:class:`OnlinePacker`): the previous call's
+        bins are amended — unchanged groups never move, resizes relocate a
+        group only when its bin overflows — instead of re-running FFD from
+        scratch each tick. Bin indices are therefore sticky across calls,
+        and the churn is observable as the ``scheduler.relocations``
+        counter (cumulative groups moved)."""
         alloc = self.allocate() if allocation is None else allocation
         with self._lock:
-            reqs = {r.name: r for r in self._requests.values() if r.unit == DEVICES}
-        # union co-location groups onto their (non-colocated) root
-        root: dict[str, str] = {}
-        for name, r in reqs.items():
-            t = name
-            seen = set()
-            while reqs.get(t) is not None and reqs[t].colocate_with in reqs and t not in seen:
-                seen.add(t)
-                t = reqs[t].colocate_with
-            root[name] = t
+            reqs = [r for r in self._requests.values() if r.unit == DEVICES]
         demands: dict[str, float] = {}
         members: dict[str, list[str]] = {}
-        for name in reqs:
-            g = root[name]
-            demands[g] = demands.get(g, 0.0) + float(alloc.get(name, 0))
-            members.setdefault(g, []).append(name)
-        cap = bin_size or max(self.service.pool.total_devices, 1)
-        bins = first_fit_decreasing(demands, float(cap))
-        return [[m for g in b for m in sorted(members[g])] for b in bins]
+        for g, group in colocation_groups(reqs).items():
+            demands[g] = float(sum(alloc.get(r.name, 0) for r in group))
+            members[g] = sorted(r.name for r in group)
+        cap = float(bin_size or max(self.service.pool.total_devices, 1))
+        with self._lock:
+            if self._packer is None:
+                self._packer = OnlinePacker(cap)
+            elif self._packer.capacity != cap:
+                self._packer.reset(cap)  # repositioning wholesale, not churn
+            bins = self._packer.repack(demands)
+            relocations = self._packer.relocations
+        self.bus.publish("scheduler.relocations", relocations)
+        return [[m for g in b for m in members[g]] for b in bins]
 
     # -- lifecycle ------------------------------------------------------------
 

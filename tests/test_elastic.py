@@ -14,11 +14,15 @@ import pytest
 from repro.core import PilotComputeDescription, PilotComputeService
 from repro.elastic import (
     BinPackingPolicy,
+    BrokerSaturationPolicy,
     ElasticConfig,
     ElasticController,
+    ForecastPolicy,
+    LatencyPolicy,
     MetricsBus,
     MetricsSnapshot,
     PIDScalingPolicy,
+    SLOPolicy,
     ThresholdHysteresisPolicy,
     first_fit_decreasing,
     timeline,
@@ -106,14 +110,44 @@ def test_device_pool_release_is_idempotent():
 # ---------------------------------------------------------------------------
 
 
-def _snap(lag, busy=0.0, leased=2, demands=None, t=0.0, pipeline=None):
+def _snap(lag, busy=0.0, leased=2, demands=None, t=0.0, pipeline=None,
+          p50=0.0, p99=0.0, stall=0.0, migration_ms=0.0, rps=None):
     return MetricsSnapshot(
-        t=t, lag=lag, records_per_sec=sum((demands or {}).values()),
+        t=t, lag=lag,
+        records_per_sec=sum((demands or {}).values()) if rps is None else rps,
         processing_delay=0.0, scheduling_delay=0.0, busy_frac=busy,
         devices_total=8, devices_leased=leased, utilization=leased / 8,
         pipeline_devices=leased if pipeline is None else pipeline,
         stage_demands=demands or {},
+        latency_p50=p50, latency_p99=p99, broker_stall_frac=stall,
+        state_migration_ms=migration_ms, state_migration_t=t,
     )
+
+
+def test_all_hysteresis_policies_act_on_the_exact_watermark():
+    """Boundary bug (predictive-scheduling PR): ThresholdHysteresisPolicy
+    used a strict ``>`` on the up-leg while Latency/SLO/BrokerSaturation
+    used ``>=`` — and the in-band ``else`` zeroes BOTH counters, so a
+    signal sitting *exactly* on the watermark never accumulated toward
+    ``up_stable`` there. Every policy's up-leg must be inclusive: two
+    flat-at-watermark observations scale up."""
+    cases = [
+        (ThresholdHysteresisPolicy(high_lag=100, low_lag=10, up_stable=2),
+         lambda: _snap(lag=100.0)),
+        (LatencyPolicy(batch_interval=1.0, up_frac=0.8, up_stable=2),
+         lambda: _snap(lag=0.0, p99=0.8)),  # p99 == up_frac * interval
+        (SLOPolicy(slo_p99=0.5, up_margin=1.0, up_stable=2),
+         lambda: _snap(lag=0.0, p99=0.5)),  # p99 == up_margin * slo
+        (BrokerSaturationPolicy(high_stall=0.3, up_stable=2),
+         lambda: _snap(lag=0.0, stall=0.3)),  # stall == high watermark
+    ]
+    for policy, make in cases:
+        name = type(policy).__name__
+        first = policy.decide(make())
+        assert first.delta_devices == 0, f"{name}: acted before up_stable"
+        second = policy.decide(make())
+        assert second.delta_devices > 0, \
+            f"{name}: flat-at-watermark signal never scaled up"
 
 
 def test_threshold_policy_hysteresis_and_busy_guard():
@@ -170,6 +204,108 @@ def test_first_fit_decreasing_and_binpacking_policy():
     # holding 3 extra devices must not suppress this pipeline's grow
     skewed = _snap(0, leased=6, pipeline=2, demands={"big": 150, "small": 60})
     assert p.decide(skewed).delta_devices == 1
+
+
+# ---------------------------------------------------------------------------
+# forecast policy (predictive, cost-aware)
+# ---------------------------------------------------------------------------
+
+
+def _feed_saturated(policy, *, devices, rps, lag=10.0, ticks=6):
+    """Drive the RLS with capacity-limited snapshots (lag > 0) at a fixed
+    operating point so mu converges to rps / devices."""
+    last = None
+    for i in range(ticks):
+        last = policy.decide(_snap(lag, t=float(i), pipeline=devices,
+                                   leased=devices, rps=rps))
+    return last
+
+
+def test_forecast_policy_holds_until_min_observations():
+    p = ForecastPolicy(min_observations=3)
+    assert p.decide(_snap(500.0, t=0.0, pipeline=1, rps=10.0)).delta_devices == 0
+    assert p.decide(_snap(500.0, t=1.0, pipeline=1, rps=10.0)).delta_devices == 0
+    # third snapshot: model is trusted, the huge backlog forces a grow
+    d = p.decide(_snap(500.0, t=2.0, pipeline=1, rps=10.0))
+    assert d.absolute and d.delta_devices > 0
+
+
+def test_forecast_policy_learns_service_rate_and_sizes_from_arrivals():
+    p = ForecastPolicy(horizon=5.0, headroom=0.0, min_observations=2)
+    # 2 devices pushing 100 rec/s while backlogged -> mu ~= 50 rec/s/dev
+    _feed_saturated(p, devices=2, rps=100.0)
+    assert p.service_rate == pytest.approx(50.0, rel=0.05)
+    # constant lag + 100 rec/s throughput -> arrivals ~= 100 rec/s
+    assert p.arrival_rate == pytest.approx(100.0, rel=0.05)
+    # arrivals step to ~200 rec/s (lag growing 100/tick on top of the
+    # 100 rec/s the 2 devices still push): forecast asks for ~4 devices
+    # *before* the backlog is large — sized from the predicted inflow
+    last = None
+    for i in range(6, 14):
+        lag = 10.0 + (i - 5) * 100.0
+        last = p.decide(_snap(lag, t=float(i), pipeline=2, leased=2, rps=100.0))
+    assert last.absolute
+    want = 2 + last.delta_devices
+    assert want >= 4
+    # and the forecast itself is consistent: at `want` devices the
+    # predicted lag is near target, at the current size it keeps growing
+    snap = _snap(810.0, t=14.0, pipeline=2, rps=100.0)
+    assert p.predicted_lag(snap, want) < p.predicted_lag(snap, 2)
+
+
+def test_forecast_policy_migration_gate_blocks_marginal_rescale():
+    # converge the model first (no migration cost published yet)
+    p = ForecastPolicy(horizon=1.0, headroom=0.0, min_observations=2,
+                       migration_gain_ratio=1.0)
+    _feed_saturated(p, devices=2, rps=100.0)
+    # a 1-device grow gains mu*1*horizon = 50 records over the horizon;
+    # a 10 s migration pause piles up arrival*10 = 1000 records -> hold
+    snap = _snap(60.0, t=20.0, pipeline=2, rps=100.0, migration_ms=10_000.0)
+    held = p.decide(snap)
+    assert held.delta_devices == 0
+    assert "migration gate" in held.reason
+    # same snapshot without the cost is released
+    p2 = ForecastPolicy(horizon=1.0, headroom=0.0, min_observations=2,
+                        migration_gain_ratio=1.0)
+    _feed_saturated(p2, devices=2, rps=100.0)
+    free = p2.decide(_snap(60.0, t=20.0, pipeline=2, rps=100.0))
+    assert free.delta_devices != 0
+    # gain scales with |delta|: a big enough backlog buys its way through
+    # the same gate because the rescale adds many devices at once
+    p3 = ForecastPolicy(horizon=1.0, headroom=0.0, min_observations=2,
+                        migration_gain_ratio=1.0)
+    _feed_saturated(p3, devices=2, rps=100.0)
+    big = p3.decide(_snap(5000.0, t=20.0, pipeline=2, rps=100.0,
+                          migration_ms=1_000.0))
+    assert big.delta_devices > 0
+
+
+def test_forecast_policy_releases_idle_devices():
+    p = ForecastPolicy(horizon=5.0, min_observations=2)
+    _feed_saturated(p, devices=4, rps=200.0)
+    # arrivals die off: zero lag, zero throughput -> shrink toward 1
+    last = None
+    for i in range(6, 12):
+        last = p.decide(_snap(0.0, t=float(i), pipeline=4, leased=4, rps=0.0))
+    assert last.absolute and 4 + last.delta_devices == 1
+
+
+def test_forecast_policy_ignores_idle_samples_for_mu():
+    p = ForecastPolicy(min_observations=1)
+    # idle trickle: lag == 0, busy far below saturation -> RLS must not
+    # learn mu ~= 1 rec/s/dev from it
+    for i in range(5):
+        p.decide(_snap(0.0, t=float(i), busy=0.1, pipeline=4, rps=4.0))
+    assert p.service_rate == p.min_mu  # still the floor, not 1.0
+
+
+def test_forecast_policy_validates_params():
+    with pytest.raises(ValueError):
+        ForecastPolicy(horizon=0.0)
+    with pytest.raises(ValueError):
+        ForecastPolicy(forgetting=0.0)
+    with pytest.raises(ValueError):
+        ForecastPolicy(arrival_alpha=1.5)
 
 
 # ---------------------------------------------------------------------------
@@ -232,7 +368,43 @@ def test_controller_defers_rescale_while_migration_cost_amortizes():
     assert up.delta_devices > 0 and ctl.devices > 2
     # cheap migrations (cost <= frac * interval) never defer
     bus.publish("state.migration_ms", 50.0)
-    assert ctl._migration_deferred(time.monotonic()) is False
+    snap = MetricsSnapshot.capture(bus, svc.pool)
+    assert ctl._migration_deferred(time.monotonic(), snap) is False
+    svc.cancel()
+
+
+def test_migration_deferral_reads_the_snapshot_not_the_bus():
+    """Regression (predictive-scheduling PR): ``_migration_deferred`` used
+    to re-read ``bus.latest("state.migration_ms")`` instead of the snapshot
+    captured two lines earlier — so it could see a *newer* sample than the
+    one the policy decided on, and (without a stream label) another
+    stage's sample entirely. The gate must consume the snapshot's
+    stream-filtered ``state_migration_ms``/``state_migration_t``."""
+    svc = PilotComputeService(devices=list(range(8)))
+    bus = MetricsBus()
+    base = svc.submit_pilot({"number_of_nodes": 1, "cores_per_node": 2, "type": "spark"})
+    ctl = ElasticController(
+        svc, base, bus,
+        ThresholdHysteresisPolicy(high_lag=100, low_lag=10, up_stable=1),
+        config=ElasticConfig(cooldown=0.0, interval=0.5, migration_cost_frac=0.5),
+        lag_probe=lambda: 1000.0,
+        stream="mine",
+    )
+    # an expensive migration on ANOTHER stream must not defer this
+    # controller: its snapshot filters to stream="mine", where no
+    # migration ever ran
+    bus.publish("state.migration_ms", 5000.0, stream="other")
+    up = ctl.step()
+    assert up.delta_devices > 0, \
+        "another stream's migration cost deferred this controller"
+    assert bus.latest("elastic.rescale_deferred", stream="mine") is None
+    # and the snapshot view is what gates: a fresh expensive migration on
+    # OUR stream defers, even though the bus's newest unlabeled read would
+    # have been the other stream's
+    bus.publish("state.migration_ms", 2000.0, stream="mine")
+    held = ctl.step()  # cooldown=0, so only the deferral can hold this
+    assert held.delta_devices == 0
+    assert bus.value("elastic.rescale_deferred", stream="mine") == 1.0
     svc.cancel()
 
 

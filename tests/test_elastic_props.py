@@ -1,0 +1,215 @@
+"""Property tests for the elastic/scheduling layer.
+
+Two invariant families, checked over randomized inputs:
+
+* **liveness** — any monotone ramp of a policy's driving signal (lag,
+  latency, broker stall) that passes its watermark eventually produces a
+  scale-up decision, for *every* ScalingPolicy. This is the generalized
+  form of the watermark boundary bug fixed in the predictive-scheduling
+  PR: a strict ``>`` up-leg passes threshold-crossing tests but fails
+  exactly-at-watermark ramps.
+* **fair-share safety** — ``weighted_fair_share`` never exceeds capacity
+  (unless the floors alone already do — base pilots physically hold
+  their floors) and never allocates below any request's floor, across
+  random request books including infeasible ones (floors-sum > capacity).
+
+Generation uses Hypothesis when it is installed; the same properties are
+always also driven by a seeded ``random.Random`` sweep so the suite does
+not silently thin out on machines without it.
+"""
+import random
+
+import pytest
+
+from repro.elastic import (
+    BinPackingPolicy,
+    BrokerSaturationPolicy,
+    ForecastPolicy,
+    LatencyPolicy,
+    MetricsSnapshot,
+    PIDScalingPolicy,
+    SLOPolicy,
+    ThresholdHysteresisPolicy,
+)
+from repro.scheduler import ResourceRequest, weighted_fair_share
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def _snap(lag=0.0, p99=0.0, stall=0.0, rps=0.0, busy=1.0, t=0.0, devices=2,
+          demands=None):
+    return MetricsSnapshot(
+        t=t, lag=lag, records_per_sec=rps, processing_delay=0.0,
+        scheduling_delay=0.0, busy_frac=busy, devices_total=8,
+        devices_leased=devices, utilization=devices / 8,
+        pipeline_devices=devices, latency_p99=p99, broker_stall_frac=stall,
+        stage_demands=demands or {},
+    )
+
+
+# every policy, with a snapshot maker that maps one scalar "load" ramp
+# onto its driving signal; the watermark each ramp must pass is 100.0
+POLICIES = {
+    "threshold": (
+        lambda: ThresholdHysteresisPolicy(high_lag=100.0, low_lag=1.0,
+                                          up_stable=2),
+        lambda v, i: _snap(lag=v),
+    ),
+    "pid": (
+        # setpoint *below* the watermark: at lag=100 the proportional term
+        # is kp * 50 / lag_per_device = 0.5, clear of the 0.25 deadband
+        lambda: PIDScalingPolicy(target_lag=50.0, kp=1.0, ki=0.0, kd=0.0),
+        lambda v, i: _snap(lag=v, t=float(i)),
+    ),
+    "latency": (
+        lambda: LatencyPolicy(batch_interval=125.0, up_frac=0.8, up_stable=2),
+        lambda v, i: _snap(p99=v),  # watermark = 0.8 * 125 = 100
+    ),
+    "slo": (
+        lambda: SLOPolicy(slo_p99=100.0, up_margin=1.0, up_stable=2),
+        lambda v, i: _snap(p99=v),
+    ),
+    "binpack": (
+        # fixed stage demand, lag-proportional boost: a rising backlog
+        # inflates packed demand past the incumbent device count
+        lambda: BinPackingPolicy(device_records_per_sec=100.0,
+                                 lag_norm=100.0),
+        lambda v, i: _snap(lag=v, demands={"s": 150.0}),
+    ),
+    "broker_saturation": (
+        lambda: BrokerSaturationPolicy(high_stall=100.0, up_stable=2),
+        lambda v, i: _snap(stall=v),
+    ),
+    "forecast": (
+        lambda: ForecastPolicy(min_observations=2, horizon=1.0,
+                               target_lag=0.0),
+        # a growing backlog with nonzero throughput: the model must infer
+        # rising arrivals and ask for more than the 2 current devices
+        lambda v, i: _snap(lag=v, rps=50.0, t=float(i)),
+    ),
+}
+
+
+def _ramp_triggers_scale_up(name, ramp):
+    """Drive ``ramp`` (monotone, ends >= watermark) through a fresh policy,
+    then hold the final value; some decision along the way must scale up."""
+    make_policy, make_snap = POLICIES[name]
+    policy = make_policy()
+    values = list(ramp) + [ramp[-1]] * 10  # hold: hysteresis may need
+    for i, v in enumerate(values):         # up_stable consecutive samples
+        if policy.decide(make_snap(float(v), i)).delta_devices > 0:
+            return True
+    return False
+
+
+def _random_ramp(rng):
+    """Monotone non-decreasing, crosses (or lands exactly on) 100."""
+    n = rng.randint(1, 12)
+    steps = sorted(rng.uniform(0.0, 99.9) for _ in range(n))
+    peak = rng.choice([100.0, rng.uniform(100.0, 500.0)])
+    return steps + [peak]
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+@pytest.mark.parametrize("seed", range(20))
+def test_monotone_ramp_eventually_scales_up(name, seed):
+    rng = random.Random(seed * 997 + hash(name) % 1000)
+    ramp = _random_ramp(rng)
+    assert _ramp_triggers_scale_up(name, ramp), \
+        f"{name}: ramp {ramp} never triggered a scale-up"
+
+
+def test_flat_at_watermark_ramp_scales_up_every_policy():
+    """The exact boundary case the `>` vs `>=` bug hid: the signal climbs
+    to the watermark and sits there, never exceeding it."""
+    for name in POLICIES:
+        assert _ramp_triggers_scale_up(name, [50.0, 100.0]), \
+            f"{name}: flat-at-watermark ramp never scaled up"
+
+
+# ---------------------------------------------------------------------------
+# weighted_fair_share safety
+# ---------------------------------------------------------------------------
+
+
+def _random_book(rng):
+    n = rng.randint(1, 8)
+    reqs = []
+    for i in range(n):
+        lo = rng.randint(0, 4)
+        hi = rng.choice([None, lo + rng.randint(0, 8)])
+        reqs.append(ResourceRequest(
+            f"r{i}", min_devices=lo, max_devices=hi,
+            weight=rng.choice([0.5, 1.0, 2.0, 3.5]),
+            priority=rng.randint(0, 2),
+            target=rng.randint(0, 20),
+        ))
+    capacity = rng.randint(0, 30)
+    return reqs, capacity
+
+
+def _check_fair_share(reqs, capacity):
+    alloc = weighted_fair_share(reqs, capacity)
+    floors = sum(r.min_devices for r in reqs)
+    assert set(alloc) == {r.name for r in reqs}
+    for r in reqs:
+        assert alloc[r.name] >= r.min_devices, \
+            f"{r.name}: floor {r.min_devices} violated ({alloc[r.name]})"
+        assert alloc[r.name] <= max(r.demand, r.min_devices), \
+            f"{r.name}: granted {alloc[r.name]} above demand {r.demand}"
+    assert sum(alloc.values()) <= max(capacity, floors), (
+        f"allocated {sum(alloc.values())} of {capacity} "
+        f"(floors {floors}): over-commit"
+    )
+
+
+@pytest.mark.parametrize("seed", range(200))
+def test_fair_share_respects_capacity_and_floors(seed):
+    reqs, capacity = _random_book(random.Random(seed))
+    _check_fair_share(reqs, capacity)
+
+
+def test_fair_share_infeasible_floors_grant_exactly_the_floors():
+    """floors-sum > capacity: nothing beyond the floors is handed out
+    (the base pilots already hold the floors; the surplus demand waits)."""
+    reqs = [ResourceRequest("a", min_devices=5, target=10),
+            ResourceRequest("b", min_devices=5, target=10, priority=1)]
+    assert weighted_fair_share(reqs, 6) == {"a": 5, "b": 5}
+
+
+if HAVE_HYPOTHESIS:
+    ramp_strategy = st.lists(
+        st.floats(min_value=0.0, max_value=99.9), min_size=0, max_size=12,
+    ).map(sorted).flatmap(
+        lambda steps: st.floats(min_value=100.0, max_value=500.0).map(
+            lambda peak: steps + [peak])
+    )
+
+    @given(name=st.sampled_from(sorted(POLICIES)), ramp=ramp_strategy)
+    @settings(max_examples=200, deadline=None)
+    def test_monotone_ramp_scales_up_hypothesis(name, ramp):
+        assert _ramp_triggers_scale_up(name, ramp)
+
+    request_strategy = st.builds(
+        lambda i, lo, extra, w, pr, tgt, unbounded: ResourceRequest(
+            f"r{i}", min_devices=lo,
+            max_devices=None if unbounded else lo + extra,
+            weight=w, priority=pr, target=tgt),
+        i=st.integers(0, 10**6), lo=st.integers(0, 4),
+        extra=st.integers(0, 8), w=st.sampled_from([0.5, 1.0, 2.0, 3.5]),
+        pr=st.integers(0, 2), tgt=st.integers(0, 20),
+        unbounded=st.booleans(),
+    )
+
+    @given(reqs=st.lists(request_strategy, min_size=1, max_size=8,
+                         unique_by=lambda r: r.name),
+           capacity=st.integers(0, 30))
+    @settings(max_examples=300, deadline=None)
+    def test_fair_share_safety_hypothesis(reqs, capacity):
+        _check_fair_share(reqs, capacity)

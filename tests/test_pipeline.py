@@ -616,6 +616,39 @@ def test_builder_validates_async_emit():
     assert PipelineSpec.from_dict(spec.to_dict()) == spec
 
 
+def test_builder_validates_preemptible():
+    # needs a crash checkpoint to resume from
+    with pytest.raises(PipelineValidationError, match="checkpoint_every"):
+        (Pipeline.named("pe1").topic("a")
+         .stage("s", topic="a", processor="count_msgs", engine="continuous")
+         .elastic("s", min_devices=0, preemptible=True, high_lag=10, low_lag=1)
+         .build())
+    # a nonzero floor means the stage is never driven to zero
+    with pytest.raises(PipelineValidationError, match="min_devices == 0"):
+        (Pipeline.named("pe2").topic("a")
+         .stage("s", topic="a", processor="count_msgs", engine="continuous",
+                checkpoint_every=10)
+         .elastic("s", min_devices=1, preemptible=True, high_lag=10, low_lag=1)
+         .build())
+    # micro-batch stages have no crash-checkpoint spool at all
+    with pytest.raises(PipelineValidationError, match="continuous"):
+        (Pipeline.named("pe3").topic("a")
+         .stage("s", topic="a", processor="count_msgs")
+         .elastic("s", min_devices=0, preemptible=True, high_lag=10, low_lag=1)
+         .build())
+    # valid spec round-trips the flag (and old dicts default it off)
+    spec = (Pipeline.named("pe4").topic("a")
+            .stage("s", topic="a", processor="count_msgs", engine="continuous",
+                   checkpoint_every=10)
+            .elastic("s", min_devices=0, preemptible=True, high_lag=10, low_lag=1)
+            .build())
+    assert spec.stage("s").elastic.preemptible
+    assert PipelineSpec.from_dict(spec.to_dict()) == spec
+    d = spec.to_dict()
+    del d["stages"][0]["elastic"]["preemptible"]
+    assert not PipelineSpec.from_dict(d).stage("s").elastic.preemptible
+
+
 def test_async_emit_reaches_the_continuous_stream():
     from repro.pipeline import register_processor as _rp
 

@@ -23,9 +23,11 @@ from repro.elastic import (
 from repro.pipeline import Pipeline, PipelineSpec, PipelineValidationError, register_processor
 from repro.scheduler import (
     HOSTS,
+    OnlinePacker,
     PoolTenant,
     ResourceArbiter,
     ResourceRequest,
+    colocation_groups,
     weighted_fair_share,
 )
 
@@ -398,6 +400,181 @@ def test_builder_validates_colocation_targets():
                 colocate_with="host")
          .elastic("guest", policy="threshold", high_lag=1, low_lag=0)
          .build())
+
+
+# ---------------------------------------------------------------------------
+# gang scheduling (all-or-nothing co-located grants)
+# ---------------------------------------------------------------------------
+
+
+def test_colocation_groups_chase_roots_and_tolerate_cycles():
+    x = ResourceRequest("x")
+    y = ResourceRequest("y", colocate_with="x")
+    z = ResourceRequest("z", colocate_with="y")  # chains collapse to the root
+    solo = ResourceRequest("solo")
+    groups = colocation_groups([x, y, z, solo])
+    assert sorted(r.name for r in groups["x"]) == ["x", "y", "z"]
+    assert [r.name for r in groups["solo"]] == ["solo"]
+    # a dangling target is its own root; a cycle doesn't hang
+    dangling = ResourceRequest("d", colocate_with="ghost")
+    a = ResourceRequest("a", colocate_with="b")
+    b = ResourceRequest("b", colocate_with="a")
+    groups = colocation_groups([dangling, a, b])
+    assert [r.name for r in groups["d"]] == ["d"]
+    assert sum(len(g) for g in groups.values()) == 3
+
+
+def test_gang_allocation_withholds_partial_groups():
+    """Contention must never leave a co-located group half-runnable: if
+    fair share would grant one member and starve its sibling, the whole
+    gang is withheld and the capacity goes to whoever can use it."""
+    svc, arb = _tenant_arbiter(n_devices=3)
+    hi = PoolTenant(svc)
+    arb.submit(hi.request("hi", min_devices=0, priority=1))
+    arb.update("hi", 2)
+    gx = ResourceRequest("g/x", min_devices=0, target=2)
+    gy = ResourceRequest("g/y", min_devices=0, target=2, colocate_with="g/x")
+    arb.submit(gx)
+    arb.submit(gy)
+    alloc = arb.allocate()
+    # 3 devices: hi takes 2, the 1 leftover cannot run both gang members
+    assert alloc["hi"] == 2
+    assert alloc["g/x"] == 0 and alloc["g/y"] == 0, \
+        f"partial gang grant leaked through: {alloc}"
+    # without the contender the gang is whole
+    arb.withdraw("hi")
+    alloc = arb.allocate()
+    assert alloc["g/x"] >= 1 and alloc["g/y"] >= 1
+
+
+def test_gang_actuation_rolls_back_on_member_failure():
+    """A gang member whose actuator blows up (or under-delivers) must undo
+    every sibling already actuated this pass — no partially-placed gang."""
+    svc, arb = _tenant_arbiter(n_devices=8)
+    tx = PoolTenant(svc)
+    rx = tx.request("g/x", min_devices=0)
+    arb.submit(rx)
+
+    def exploding(n):
+        raise RuntimeError("placement failed")
+
+    ry = ResourceRequest("g/y", min_devices=0, colocate_with="g/x",
+                         actuator=exploding, current_fn=lambda: 0)
+    arb.submit(ry)
+    arb.update("g/x", 2)
+    arb.update("g/y", 2)
+    granted = arb.reconcile()
+    assert tx.devices == 0, "surviving member kept its grant after rollback"
+    assert granted.get("g/x", 0) == 0
+    assert any(e.action == "gang_rollback" for e in arb.events)
+    assert arb.bus.value("scheduler.errors", request="g/y") == 1.0
+    # under-delivery (reached != want) triggers the same rollback
+    svc2, arb2 = _tenant_arbiter(n_devices=8)
+    t2 = PoolTenant(svc2)
+    arb2.submit(t2.request("h/x", min_devices=0))
+    short_state = {"n": 0}
+
+    def short(n):
+        short_state["n"] = max(n - 1, 0)  # always one device short
+        return short_state["n"]
+
+    arb2.submit(ResourceRequest("h/y", min_devices=0, colocate_with="h/x",
+                                actuator=short,
+                                current_fn=lambda: short_state["n"]))
+    arb2.update("h/x", 2)
+    arb2.update("h/y", 2)
+    arb2.reconcile()
+    assert t2.devices == 0
+    assert any(e.action == "gang_rollback" for e in arb2.events)
+
+
+def test_singleton_clamped_grant_still_stands():
+    """Rollback semantics are gang-only: a lone request whose actuator
+    reaches less than the allocation keeps what it got (old behavior)."""
+    svc, arb = _tenant_arbiter(n_devices=8)
+    held = {"n": 0}
+
+    def clamping(n):
+        held["n"] = min(n, 3)  # consumer-side cap
+        return held["n"]
+
+    arb.submit(ResourceRequest("solo", min_devices=0, actuator=clamping,
+                               current_fn=lambda: held["n"]))
+    arb.update("solo", 6)
+    granted = arb.reconcile()
+    assert held["n"] == 3
+    assert granted["solo"] == 3
+    assert not any(e.action == "gang_rollback" for e in arb.events)
+
+
+# ---------------------------------------------------------------------------
+# online bin packing
+# ---------------------------------------------------------------------------
+
+
+def test_online_packer_amends_instead_of_repacking():
+    p = OnlinePacker(4)
+    p.repack({"a": 2.0, "b": 2.0, "c": 3.0})
+    first = {g: p.bin_of(g) for g in "abc"}
+    assert first["a"] == first["b"] != first["c"]  # a+b share, c alone
+    # identical demands: nothing moves, nothing is counted
+    p.repack({"a": 2.0, "b": 2.0, "c": 3.0})
+    assert {g: p.bin_of(g) for g in "abc"} == first
+    assert p.relocations == 0
+    # shrink is always in place
+    p.repack({"a": 1.0, "b": 2.0, "c": 3.0})
+    assert p.bin_of("a") == first["a"] and p.relocations == 0
+    # grow that overflows the shared bin relocates ONLY the grower
+    p.repack({"a": 3.0, "b": 2.0, "c": 3.0})
+    assert p.bin_of("b") == first["b"], "innocent bystander was moved"
+    assert p.bin_of("a") != first["a"]
+    assert p.relocations == 1
+    # arrivals go first-fit into existing bins; incumbents stay put
+    before = {g: p.bin_of(g) for g in "abc"}
+    p.repack({"a": 3.0, "b": 2.0, "c": 3.0, "d": 1.0})
+    assert {g: p.bin_of(g) for g in "abc"} == before
+    assert p.bin_of("d") is not None
+    assert p.relocations == 1  # placement of an arrival is not churn
+
+
+def test_online_packer_departures_and_oversize():
+    p = OnlinePacker(4)
+    p.repack({"a": 2.0, "b": 2.0})
+    # zero / missing demand unplaces the group and drops empty bins
+    bins = p.repack({"b": 2.0, "z": 0.0})
+    assert p.bin_of("a") is None and p.bin_of("z") is None
+    assert bins == [["b"]]
+    # an oversized group still gets a dedicated bin (FFD behavior), and
+    # growing alone in its bin never relocates
+    p.repack({"b": 2.0, "big": 9.0})
+    i = p.bin_of("big")
+    p.repack({"b": 2.0, "big": 11.0})
+    assert p.bin_of("big") == i and p.relocations == 0
+    with pytest.raises(ValueError):
+        OnlinePacker(0)
+    p.reset(8)
+    assert p.bins == [] and p.capacity == 8
+
+
+def test_arbiter_placement_is_sticky_across_ticks():
+    svc, arb = _tenant_arbiter(n_devices=8)
+    arb.submit(ResourceRequest("p/x", min_devices=2, target=2))
+    arb.submit(ResourceRequest("p/y", min_devices=1, target=1,
+                               colocate_with="p/x"))
+    arb.submit(ResourceRequest("p/z", min_devices=3, target=3))
+    first = arb.placement(bin_size=4)
+    for _ in range(3):
+        assert arb.placement(bin_size=4) == first, \
+            "unchanged demands must not reshuffle bins"
+    assert arb.bus.value("scheduler.relocations") == 0
+    # a new request lands without disturbing the incumbents' bins
+    arb.submit(ResourceRequest("p/w", min_devices=1, target=1))
+    second = arb.placement(bin_size=4)
+    flat_first = {m for b in first for m in b}
+    assert flat_first <= {m for b in second for m in b}
+    incumbent_bins = [
+        [m for m in b if m in flat_first] for b in second]
+    assert [b for b in incumbent_bins if b] == first
 
 
 # ---------------------------------------------------------------------------
